@@ -1,0 +1,46 @@
+"""Quickstart: DecByzPG on CartPole with Byzantine agents (paper Fig. 2).
+
+13 agents, 3 Byzantine running the AvgZero attack; DecByzPG (bucketed RFA
+aggregation + GDA averaging agreement) vs the naive Dec-PAGE-PG baseline.
+
+  PYTHONPATH=src python examples/quickstart.py [--iters 40]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.decbyzpg import DecByzPGConfig, run_decbyzpg
+from repro.rl.envs import make_cartpole
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=40)
+    ap.add_argument("--attack", default="avg_zero")
+    args = ap.parse_args()
+
+    env = make_cartpole(horizon=200)
+    common = dict(K=13, n_byz=3, attack=args.attack, N=20, B=4,
+                  eta=2e-2, seed=0)
+    print(f"== DecByzPG (robust) vs Dec-PAGE-PG (naive), attack="
+          f"{args.attack}, 3/13 Byzantine ==")
+    robust = run_decbyzpg(env, DecByzPGConfig(
+        aggregator="rfa", kappa=5, **common), T=args.iters)
+    naive = run_decbyzpg(env, DecByzPGConfig(
+        aggregator="mean", kappa=0, **common), T=args.iters)
+    print(f"{'samples/agent':>14s} {'DecByzPG':>10s} {'Dec-PAGE-PG':>12s}")
+    for i in range(0, args.iters, max(args.iters // 10, 1)):
+        print(f"{robust['samples'][i]:14d} {robust['returns'][i]:10.1f} "
+              f"{naive['returns'][i]:12.1f}")
+    print(f"final (mean of last 5): DecByzPG="
+          f"{np.mean(robust['returns'][-5:]):.1f}  "
+          f"Dec-PAGE-PG={np.mean(naive['returns'][-5:]):.1f}")
+    print(f"honest parameter diameter under attack: "
+          f"{robust['diameter'][-1]:.2e} (agreement keeps agents synced)")
+
+
+if __name__ == "__main__":
+    main()

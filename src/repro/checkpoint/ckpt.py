@@ -1,0 +1,40 @@
+"""Minimal dependency-free checkpointing: pytree -> npz (+ tree structure
+by key-path), with exact-structure restore."""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "name", getattr(
+            p, "idx", p)))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(tree, path: str) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def restore(template, path: str):
+    """Restore into the structure of ``template`` (shape/dtype checked)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat[0]:
+        key = "/".join(str(getattr(q, "key", getattr(q, "name", getattr(
+            q, "idx", q)))) for q in p)
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(flat[1], leaves)

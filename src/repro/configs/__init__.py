@@ -1,0 +1,3 @@
+from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, InputShape,
+                                MLAConfig, MoEConfig, ModelConfig, SSMConfig,
+                                XLSTMConfig, all_configs, get_config, reduced)

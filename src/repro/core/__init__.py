@@ -1,0 +1,5 @@
+from repro.core.aggregators import get_aggregator
+from repro.core.agreement import avg_agree, gda_mean, honest_diameter, mda_mean
+from repro.core.attacks import ATTACKS, get_attack, per_receiver
+from repro.core.byzpg import ByzPGConfig, run_byzpg
+from repro.core.decbyzpg import DecByzPGConfig, run_decbyzpg

@@ -1,0 +1,162 @@
+"""(α, C_ra)-robust aggregation (paper Def. 1, App. A.2).
+
+All aggregators map a stacked input ``x: (K, d)`` to ``(d,)``. Production
+implementations per the paper: **bucketing ∘ Krum** (α_max = 1/4) and
+**bucketing ∘ RFA** (α_max = 1/2, smoothed Weiszfeld). Coordinate-wise
+median / trimmed mean are provided as additional baselines.
+
+Pairwise distances route through ``repro.kernels.pairwise_dist`` (Pallas on
+TPU, jnp oracle elsewhere); distances decompose over model shards so the
+distributed path psums the K×K matrix instead of gathering vectors
+(DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists(x: jnp.ndarray) -> jnp.ndarray:
+    """(K, d) -> (K, K) squared euclidean distances (jnp oracle path)."""
+    from repro.kernels.pairwise_dist import ops
+    return ops.pairwise_sq_dists(x)
+
+
+# ---------------------------------------------------------------------------
+# Base aggregators
+# ---------------------------------------------------------------------------
+
+def mean(x, key=None):
+    return jnp.mean(x, axis=0)
+
+
+def krum(x, n_byz: int, key=None, m: int = 1):
+    """(Multi-)Krum [34]: score_i = Σ_{j in closest K-n_byz-2} ||x_j - x_i||²;
+    return the mean of the m lowest-scoring inputs."""
+    K = x.shape[0]
+    d2 = pairwise_sq_dists(x)
+    n_near = max(K - n_byz - 2, 1)
+    near = jnp.sort(d2, axis=1)[:, 1:n_near + 1]      # skip self (0)
+    scores = jnp.sum(near, axis=1)
+    if m == 1:
+        return x[jnp.argmin(scores)]
+    _, idx = jax.lax.top_k(-scores, m)
+    return jnp.mean(x[idx], axis=0)
+
+
+def rfa(x, key=None, n_iter: int = 32, nu: float = 1e-6):
+    """Robust Federated Averaging [35]: geometric median via smoothed
+    Weiszfeld [36]."""
+    z = jnp.mean(x, axis=0)
+
+    def body(z, _):
+        dist = jnp.sqrt(jnp.sum((x - z) ** 2, axis=1) + nu)
+        w = 1.0 / dist
+        return jnp.sum(w[:, None] * x, axis=0) / jnp.sum(w), None
+
+    z, _ = jax.lax.scan(body, z, None, length=n_iter)
+    return z
+
+
+def coordinate_median(x, key=None):
+    return jnp.median(x, axis=0)
+
+
+def trimmed_mean(x, n_byz: int, key=None):
+    """Coordinate-wise: drop the n_byz largest and smallest per coordinate.
+
+    Routes through the Pallas ``trimmed_mean`` kernel on TPU.
+    """
+    from repro.kernels.trimmed_mean import ops
+    return ops.trimmed_mean(x, n_byz)
+
+
+def centered_clip(x, key=None, tau: float = 1.0, n_iter: int = 5,
+                  center=None):
+    """Centered clipping [29]: iteratively re-center on the clipped mean
+    v <- v + mean_i clip(x_i - v, tau). Robust for alpha < 1/2 under
+    bounded variance; tau should scale with the honest std."""
+    # start from the coordinate-wise median: the clipped-mean iteration
+    # moves at most tau per step, so a mean start can stay stuck near a
+    # large-outlier attack
+    v = jnp.median(x, axis=0) if center is None else center
+
+    def body(v, _):
+        diff = x - v
+        norm = jnp.linalg.norm(diff, axis=1, keepdims=True)
+        clipped = diff * jnp.minimum(1.0, tau / jnp.maximum(norm, 1e-12))
+        return v + jnp.mean(clipped, axis=0), None
+
+    v, _ = jax.lax.scan(body, v, None, length=n_iter)
+    return v
+
+
+def resilient_momentum_update(agg: Callable, momenta, beta: float,
+                              grads, key=None):
+    """One step of resilient averaging of momentums [23]: workers keep
+    local momenta m_i <- beta m_i + (1-beta) g_i; the server robustly
+    aggregates the momenta (variance shrinks by (1-beta), improving any
+    (alpha, C_ra)-aggregator's bound). Returns (new_momenta, direction).
+    momenta/grads: (K, d)."""
+    new_m = beta * momenta + (1.0 - beta) * grads
+    return new_m, agg(new_m, key)
+
+
+# ---------------------------------------------------------------------------
+# Bucketing wrapper [33]
+# ---------------------------------------------------------------------------
+
+def bucketing(inner: Callable, x, key, bucket_size: int):
+    """Randomly permute inputs, average buckets of ``bucket_size``, then apply
+    the inner aggregator to the bucket means (Karimireddy et al. [33])."""
+    K, d = x.shape
+    n_buckets = -(-K // bucket_size)
+    perm = jax.random.permutation(key, K)
+    pad = n_buckets * bucket_size - K
+    # pad by repeating the first permuted entries so every bucket is full
+    idx = jnp.concatenate([perm, perm[:pad]]) if pad else perm
+    means = jnp.mean(x[idx].reshape(n_buckets, bucket_size, d), axis=1)
+    return inner(means)
+
+
+# ---------------------------------------------------------------------------
+# Factory
+# ---------------------------------------------------------------------------
+
+def get_aggregator(name: str, K: int, n_byz: int,
+                   alpha_max: Optional[float] = None) -> Callable:
+    """Returns ``agg(x, key) -> (d,)``.
+
+    Bucket size per Lemma 3: ``floor(alpha_max / alpha)`` with
+    ``alpha = n_byz / K`` (bucketing disabled when n_byz == 0).
+    """
+    alpha = n_byz / K
+
+    def bucket_size(amax):
+        if n_byz == 0:
+            return 1
+        return max(1, int(amax / max(alpha, 1e-9)))
+
+    if name == "mean":
+        return lambda x, key=None: mean(x)
+    if name == "krum":
+        bs = bucket_size(alpha_max or 0.25)
+        inner = functools.partial(krum, n_byz=max(1, -(-K // bs) // 4))
+        if bs == 1:
+            return lambda x, key=None: krum(x, n_byz=max(n_byz, 1))
+        return lambda x, key: bucketing(inner, x, key, bs)
+    if name == "rfa":
+        bs = bucket_size(alpha_max or 0.5)
+        if bs == 1:
+            return lambda x, key=None: rfa(x)
+        return lambda x, key: bucketing(rfa, x, key, bs)
+    if name == "cwmed":
+        return lambda x, key=None: coordinate_median(x)
+    if name == "centered_clip":
+        return lambda x, key=None: centered_clip(x)
+    if name == "trimmed_mean":
+        return lambda x, key=None: trimmed_mean(x, max(n_byz, 1))
+    raise KeyError(f"unknown aggregator {name!r}")

@@ -1,0 +1,93 @@
+"""Byzantine attack library (paper §6.2 + standard literature attacks).
+
+An attack is ``fn(honest_msgs (K, d), byz_mask (K,), key) -> (K, d)`` —
+rows where ``byz_mask`` is True are replaced with adversarial values, the
+rest are returned untouched. The adversary is omniscient: it sees all honest
+messages (AvgZero exploits this, per the paper). ``per_receiver(attack)``
+lifts any attack to send independently drawn values to every receiver
+(a (K, K, d) message tensor), which the agreement simulator accepts.
+
+``RandomAction`` is environment-level (a Byzantine agent interacts with its
+environment using uniformly random actions but computes its gradient
+honestly); it is implemented in the algorithm drivers via
+``env_level_attacks``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _apply(byz_fn, honest, byz_mask, key):
+    byz_vals = byz_fn(honest, byz_mask, key)
+    return jnp.where(byz_mask[:, None], byz_vals, honest)
+
+
+def none_attack(honest, byz_mask, key):
+    return honest
+
+
+def large_noise(honest, byz_mask, key, sigma: float = 100.0):
+    """Byzantines send pure noise of large variance (paper: LargeNoise)."""
+    noise = sigma * jax.random.normal(key, honest.shape, honest.dtype)
+    return jnp.where(byz_mask[:, None], noise, honest)
+
+
+def avg_zero(honest, byz_mask, key):
+    """Colluding omniscient attack: Byzantine values are chosen so the
+    *average over all K messages* is (close to) zero (paper: AvgZero)."""
+    n_byz = jnp.maximum(jnp.sum(byz_mask), 1)
+    honest_sum = jnp.sum(jnp.where(byz_mask[:, None], 0.0, honest), axis=0)
+    byz_val = -honest_sum / n_byz
+    return jnp.where(byz_mask[:, None], byz_val[None], honest)
+
+
+def sign_flip(honest, byz_mask, key, scale: float = 3.0):
+    """Byzantines send the negated (scaled) honest mean (IPM-style [22])."""
+    n_h = jnp.maximum(jnp.sum(~byz_mask), 1)
+    mu = jnp.sum(jnp.where(byz_mask[:, None], 0.0, honest), axis=0) / n_h
+    return jnp.where(byz_mask[:, None], -scale * mu[None], honest)
+
+
+def alie(honest, byz_mask, key, z: float = 1.5):
+    """A Little Is Enough: honest mean shifted by z std-devs per coordinate
+    — crafted to hide inside the honest spread."""
+    n_h = jnp.maximum(jnp.sum(~byz_mask), 1)
+    w = (~byz_mask).astype(honest.dtype)[:, None]
+    mu = jnp.sum(w * honest, axis=0) / n_h
+    var = jnp.sum(w * (honest - mu) ** 2, axis=0) / n_h
+    byz_val = mu - z * jnp.sqrt(var + 1e-12)
+    return jnp.where(byz_mask[:, None], byz_val[None], honest)
+
+
+ATTACKS = {
+    "none": none_attack,
+    "large_noise": large_noise,
+    "avg_zero": avg_zero,
+    "sign_flip": sign_flip,
+    "alie": alie,
+    # env-level: handled by the driver, message path is honest
+    "random_action": none_attack,
+}
+
+# attacks that corrupt the agent's environment interaction instead of its
+# messages (paper: RandomAction)
+ENV_LEVEL_ATTACKS = ("random_action",)
+
+
+def get_attack(name: str, **kw) -> Callable:
+    fn = ATTACKS[name]
+    return functools.partial(fn, **kw) if kw else fn
+
+
+def per_receiver(attack: Callable, K: int) -> Callable:
+    """Lift an attack to send independent values to each receiver."""
+
+    def fn(honest, byz_mask, key):
+        keys = jax.random.split(key, K)
+        return jax.vmap(lambda k: attack(honest, byz_mask, k))(keys)
+
+    return fn

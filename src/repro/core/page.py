@@ -1,0 +1,38 @@
+"""Generic (supervised) PAGE estimator [17] — the probabilistic-switch
+variance-reduced gradient used by ByzPG/DecByzPG. For stationary data
+(the LLM path) the importance weight is identically 1 and PAGE takes its
+original form; the RL drivers implement the importance-sampled variant.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PageState(NamedTuple):
+    v: object             # running direction (pytree like params)
+    prev_params: object
+
+
+def init_page(params) -> PageState:
+    return PageState(jax.tree.map(jnp.zeros_like, params), params)
+
+
+def page_direction(grad_fn: Callable, params, state: PageState, batch,
+                   use_large: bool) -> PageState:
+    """grad_fn(params, batch) -> grad pytree.
+
+    use_large=True: v = ĝ(θ_t) (fresh large-batch estimate).
+    use_large=False: v = ĝ_B(θ_t) − ĝ_B(θ_{t-1}) + v_{t-1} (PAGE correction,
+    both estimates on the SAME small batch).
+    Returns the new state; the direction is ``state.v``.
+    """
+    g_new = grad_fn(params, batch)
+    if use_large:
+        v = g_new
+    else:
+        g_old = grad_fn(state.prev_params, batch)
+        v = jax.tree.map(lambda a, b, c: a - b + c, g_new, g_old, state.v)
+    return PageState(v, params)

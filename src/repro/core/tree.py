@@ -1,0 +1,34 @@
+"""Pytree <-> flat-vector utilities for stacked (per-agent) parameters."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+def ravel(tree):
+    """tree -> (vec (d,), unravel_fn)."""
+    return ravel_pytree(tree)
+
+
+def stack_ravel(stacked_tree) -> jnp.ndarray:
+    """Tree with leading K axis on every leaf -> (K, d) matrix.
+
+    Leaf order matches ``ravel`` of a single agent's tree.
+    """
+    leaves = jax.tree.leaves(stacked_tree)
+    K = leaves[0].shape[0]
+    return jnp.concatenate([l.reshape(K, -1) for l in leaves], axis=1)
+
+
+def unstack_unravel(mat: jnp.ndarray, template):
+    """(K, d) matrix -> tree with leading K axis, shaped like template
+    (template has NO leading K axis)."""
+    leaves, treedef = jax.tree.flatten(template)
+    K = mat.shape[0]
+    out, off = [], 0
+    for l in leaves:
+        n = l.size
+        out.append(mat[:, off:off + n].reshape((K,) + l.shape).astype(l.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)

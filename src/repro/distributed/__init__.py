@@ -1,0 +1,6 @@
+from repro.distributed import aggregation, sharding
+from repro.distributed.fed_trainer import (FedConfig, FedState,
+                                           common_sample_coin,
+                                           fed_state_shardings,
+                                           fed_train_step, init_fed_state,
+                                           make_fed_step)

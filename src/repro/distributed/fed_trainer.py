@@ -1,0 +1,182 @@
+"""Federated DecByzPG trainer for the assigned architectures.
+
+State layout: every agent's parameters/optimizer state carry a leading K
+axis sharded over the federation axes (DESIGN.md §3), so this *is* the
+decentralized algorithm — no chip holds another agent's state; the robust
+aggregation and GDA agreement are the only cross-agent collectives.
+
+Per step (the PAGE coin is drawn host-side by Common-Sample and selects one
+of two compiled programs):
+  large (c=1): ṽ^(k) = ∇CE(θ^(k); batch_k)
+  small (c=0): ṽ^(k) = ∇CE(θ^(k); b_k) − ∇CE(θ_prev^(k); b_k) + v_prev^(k)
+then: attack → robust-aggregate → per-agent optimizer step → Avg-Agree_κ.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import aggregation as agg_lib
+from repro.distributed.sharding import (batch_spec, fed_axes, n_agents,
+                                        param_shardings)
+from repro.models.model import init_params, lm_loss, lm_loss_labeled
+from repro.optim.optimizers import get_optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    aggregator: str = "rfa"
+    kappa: int = 4
+    alpha_bar: float = 0.2
+    n_byz: int = 0
+    attack: str = "none"
+    lr: float = 1e-4
+    optimizer: str = "adam"
+    page_p: float = 0.1              # Common-Sample coin probability
+    mix_dtype: Optional[str] = None  # None | "bfloat16" (§Perf opt)
+    mix_block: int = 0               # stream agreement in K-blocks (§Perf)
+    seed: int = 0
+
+
+class FedState(NamedTuple):
+    params: object       # agent-stacked (K, ...)
+    prev_params: object
+    v: object            # running PAGE direction, agent-stacked
+    opt_state: object
+    step: jnp.ndarray
+
+
+def init_fed_state(cfg: ModelConfig, fed: FedConfig, K: int, key,
+                   dtype=jnp.float32) -> FedState:
+    p0 = init_params(cfg, key, dtype)
+    stack = jax.tree.map(lambda l: jnp.broadcast_to(l[None], (K,) + l.shape),
+                         p0)                      # common init θ_0
+    opt = get_optimizer(fed.optimizer, fed.lr, maximize=False)
+    opt_state = jax.vmap(opt.init)(stack)
+    v = jax.tree.map(jnp.zeros_like, stack)
+    return FedState(stack, stack, v, opt_state, jnp.zeros((), jnp.int32))
+
+
+def _loss(cfg, params, batch):
+    if "labels" in batch:
+        return lm_loss_labeled(cfg, params, batch["tokens"],
+                               batch["labels"], batch.get("prefix_embeds"))
+    return lm_loss(cfg, params, batch["tokens"],
+                   batch.get("prefix_embeds"))
+
+
+def fed_train_step(cfg: ModelConfig, fed: FedConfig, state: FedState,
+                   batch, byz_mask, key, *, large: bool) -> tuple:
+    """batch: {'tokens': (K, b, S)[, 'prefix_embeds': (K, b, P, D)]}.
+
+    ``large`` is static (two compiled programs — the PAGE switch is resolved
+    by the host-side Common-Sample coin).
+    Returns (new_state, metrics).
+    """
+    grad_fn = jax.grad(lambda p, b: _loss(cfg, p, b))
+    loss_fn = jax.value_and_grad(lambda p, b: _loss(cfg, p, b))
+
+    losses, g_new = jax.vmap(loss_fn)(state.params, batch)
+    if large:
+        tilde_v = g_new
+    else:
+        g_old = jax.vmap(grad_fn)(state.prev_params, batch)
+        tilde_v = jax.tree.map(lambda a, b, c: a - b + c,
+                               g_new, g_old, state.v)
+
+    K = byz_mask.shape[0]
+    k_att, k_agg = jax.random.split(key)
+    if K == 1:
+        v = tilde_v        # single-agent federation: aggregation is identity
+    else:
+        tilde_v = agg_lib.attack_stacked(fed.attack, tilde_v, byz_mask,
+                                         k_att)
+        v = agg_lib.aggregate(fed.aggregator, tilde_v, fed.n_byz, k_agg)
+
+    opt = get_optimizer(fed.optimizer, fed.lr, maximize=False)
+    new_params, new_opt = jax.vmap(opt.update)(v, state.opt_state,
+                                               state.params)
+    mix_dtype = jnp.bfloat16 if fed.mix_dtype == "bfloat16" else None
+    new_params = agg_lib.gda_agree(new_params, fed.kappa, fed.alpha_bar,
+                                   mix_dtype=mix_dtype, block=fed.mix_block)
+
+    metrics = {
+        "loss": jnp.mean(jnp.where(byz_mask, 0.0, losses))
+        * byz_mask.shape[0] / jnp.maximum(jnp.sum(~byz_mask), 1),
+        # K=1: diameter is identically 0 (and the pairwise tensordot would
+        # force an all-gather of the full parameter stack)
+        "diameter": (jnp.zeros(()) if K == 1 else jnp.sqrt(jnp.max(
+            agg_lib.stacked_sq_dists(new_params)))),
+    }
+    new_state = FedState(new_params, state.params, v, new_opt,
+                         state.step + 1)
+    return new_state, metrics
+
+
+def fed_state_shardings(cfg: ModelConfig, state_shape: FedState, mesh):
+    """NamedShardings for a FedState shape tree (opt_state m/v mirror the
+    stacked parameter rules; scalar counters are replicated)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rep = NamedSharding(mesh, P())
+    pshard = lambda tree: param_shardings(cfg, tree, mesh, stacked=True)
+    opt = state_shape.opt_state
+    if hasattr(opt, "m") and hasattr(opt, "v"):          # AdamState
+        opt_sh = type(opt)(rep, pshard(opt.m), pshard(opt.v))
+    elif hasattr(opt, "m"):                              # MomentumState
+        opt_sh = type(opt)(pshard(opt.m))
+    else:
+        opt_sh = jax.tree.map(lambda _: rep, opt)
+    return FedState(pshard(state_shape.params),
+                    pshard(state_shape.prev_params),
+                    pshard(state_shape.v), opt_sh, rep)
+
+
+def make_fed_step(cfg: ModelConfig, fed: FedConfig, mesh, *, large: bool,
+                  dtype=jnp.float32, per_agent_batch: int = 8,
+                  seq_len: int = 512):
+    """jit'd federated step with mesh shardings (used by launch + dry-run).
+
+    Returns (jitted_step, state_shape, batch_shape, shardings dict).
+    """
+    from jax.sharding import NamedSharding
+    K = n_agents(cfg, mesh)
+    state_shape = jax.eval_shape(
+        lambda k: init_fed_state(cfg, fed, K, k, dtype),
+        jax.random.PRNGKey(0))
+    state_sh = fed_state_shardings(cfg, state_shape, mesh)
+    b_sh = NamedSharding(mesh, batch_spec(cfg, mesh, stacked=True))
+    rep = NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    batch = {"tokens": jax.ShapeDtypeStruct((K, per_agent_batch, seq_len),
+                                            jnp.int32),
+             "labels": jax.ShapeDtypeStruct((K, per_agent_batch, seq_len),
+                                            jnp.int32)}
+    batch_sh = {"tokens": b_sh, "labels": b_sh}
+    if cfg.frontend != "none":
+        batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (K, per_agent_batch, cfg.n_prefix_embeds, cfg.d_model), dtype)
+        batch["tokens"] = jax.ShapeDtypeStruct(
+            (K, per_agent_batch, seq_len - cfg.n_prefix_embeds), jnp.int32)
+        batch["labels"] = batch["tokens"]
+        batch_sh["prefix_embeds"] = b_sh
+
+    step = jax.jit(
+        lambda state, b, mask, key: fed_train_step(
+            cfg, fed, state, b, mask, key, large=large),
+        in_shardings=(state_sh, batch_sh, rep, rep),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,))
+    return step, state_shape, batch, (state_sh, batch_sh, rep)
+
+
+def common_sample_coin(step: int, seed: int, p: float) -> bool:
+    """Common-Sample: the paper's shared PRNG coin (host-level, derived from
+    the common initialization seed)."""
+    rng = np.random.default_rng(np.uint64(seed) * np.uint64(1_000_003)
+                                + np.uint64(step))
+    return bool(step == 0 or rng.random() < p)

@@ -1,0 +1,75 @@
+"""Serving steps: prefill and single-token decode, mesh-sharded.
+
+decode shapes lower ``decode_step`` — one new token against a KV/state
+cache of ``seq_len``; ``long_500k`` allocates a sliding-window ring of
+``cfg.long_context_window`` instead (sub-quadratic + sub-linear memory),
+and recurrent families carry O(1) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import cache_shardings, param_shardings
+from repro.models.model import (decode_step, init_cache, init_params,
+                                prefill)
+
+
+def serve_cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Ring size for a decode cache over a context of ``seq_len``."""
+    if cfg.family == "ssm":
+        return 1                       # recurrent state only
+    if seq_len > 65536:                # long-context: sliding-window ring
+        return cfg.long_context_window
+    return seq_len
+
+
+def make_serve_fns(cfg: ModelConfig, mesh, batch: int, seq_len: int,
+                   dtype=jnp.float32):
+    """Returns (prefill_jit, decode_jit, specs) with mesh shardings.
+
+    prefill(params, tokens[, prefix_embeds]) -> (logits, cache)
+    decode(params, token, cache) -> (logits, cache)
+    """
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n_batch_shards = 1
+    for a in axes:
+        n_batch_shards *= mesh.shape[a]
+    if batch % max(n_batch_shards, 1) != 0:
+        axes = ()                      # e.g. long_500k batch=1: replicate
+    b_spec = P(axes if axes else None)
+    rep = NamedSharding(mesh, P())
+    p_sh = lambda shape: param_shardings(cfg, shape, mesh, stacked=False)
+    W = serve_cache_len(cfg, seq_len)
+
+    cache_shape = jax.eval_shape(
+        lambda: init_cache(cfg, batch, W, dtype))
+    c_sh = cache_shardings(cfg, cache_shape, mesh)
+    params_shape = jax.eval_shape(lambda k: init_params(cfg, k, dtype),
+                                  jax.random.PRNGKey(0))
+    psh = p_sh(params_shape)
+
+    def _prefill(params, tokens, prefix_embeds=None):
+        return prefill(cfg, params, tokens, prefix_embeds, cache_len=W)
+
+    def _decode(params, token, cache):
+        return decode_step(cfg, params, token, cache)
+
+    # prefill cache out-sharding is left to propagation (requesting the
+    # ring layout here forces an SPMD full-rematerialization inside the
+    # layer scan); decode's explicit in_shardings re-lay it out once.
+    prefill_jit = jax.jit(
+        _prefill,
+        in_shardings=(psh, NamedSharding(mesh, b_spec), None)
+        if cfg.frontend != "none" else (psh, NamedSharding(mesh, b_spec)),
+        out_shardings=(NamedSharding(mesh, b_spec), None))
+    decode_jit = jax.jit(
+        _decode,
+        in_shardings=(psh, NamedSharding(mesh, b_spec), c_sh),
+        out_shardings=(NamedSharding(mesh, b_spec), c_sh),
+        donate_argnums=(2,))
+    return prefill_jit, decode_jit, {
+        "params": psh, "cache": c_sh, "cache_shape": cache_shape,
+        "params_shape": params_shape, "batch_spec": b_spec}

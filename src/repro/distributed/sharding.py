@@ -1,0 +1,209 @@
+"""Sharding rules for the (pod, data, model) production mesh.
+
+Parameters are named-sharded by leaf-path rules operating on *trailing*
+dimensions, so the same table serves plain trees, layer-stacked trees
+(leading L), and federated agent-stacked trees (leading K).
+
+Federation mapping (DESIGN.md §3):
+  fed_axis="data": agents live on every (pod, data) rank -> K = pods*data;
+                   per-agent batch is unsharded (local).
+  fed_axis="pod" : one agent per pod -> K = pods; the data axis shards the
+                   agent's batch (and could FSDP params; we keep params
+                   model-sharded + data-replicated, optimizer state too).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# leaf name -> trailing dim that gets the "model" axis
+_MODEL_LAST = {"wq", "wk", "wv", "w_gate", "w_up", "bq", "bk", "bv",
+               "w_uq", "w_uk", "w_uv", "lm_head"}
+_MODEL_SECOND = {"wo", "w_down"}
+_REPLICATE = {"router", "norm_attn", "norm_mlp", "final_norm", "norm_m",
+              "norm_s", "frontend_proj", "w_dq", "w_dkv"}
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def fed_axes(cfg: ModelConfig, mesh: Mesh) -> Tuple[str, ...]:
+    has_pod = "pod" in mesh.shape
+    if cfg.fed_axis == "pod":
+        return ("pod",) if has_pod else ()
+    if cfg.fed_axis == "all":
+        # TP-free federation: one agent per chip (beyond-paper sharding,
+        # EXPERIMENTS.md §Perf) — no tensor parallelism, the only
+        # collectives left are the paper's aggregation + agreement.
+        return ("pod", "data", "model") if has_pod else ("data", "model")
+    return ("pod", "data") if has_pod else ("data",)
+
+
+def n_agents(cfg: ModelConfig, mesh: Mesh) -> int:
+    axes = fed_axes(cfg, mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return max(n, 1)
+
+
+def batch_axes(cfg: ModelConfig, mesh: Mesh) -> Tuple[str, ...]:
+    """Axes sharding the per-agent batch dimension."""
+    if cfg.fed_axis == "pod":
+        return ("data",)
+    if getattr(cfg, "intra_agent_dp", False) and cfg.fed_axis == "data":
+        return ("model",)
+    return ()
+
+
+def _path_names(path) -> list:
+    names = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            names.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            names.append(p.name)
+    return names
+
+
+def param_spec(cfg: ModelConfig, path, leaf, mesh: Mesh,
+               stacked: bool = False) -> P:
+    """PartitionSpec for one parameter leaf."""
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    ndim = leaf.ndim
+    spec = [None] * ndim
+    if cfg.fed_axis == "all" or getattr(cfg, "intra_agent_dp", False):
+        # agent params replicated within the agent's chip group (TP-free)
+        if stacked:
+            axes = fed_axes(cfg, mesh)
+            spec[0] = axes if axes else None
+        return P(*spec)
+    model_ok = mesh_axis_size(mesh, "model") > 1
+
+    in_recurrent = (cfg.family == "ssm") or ("ssm" in names) \
+        or ("m" in names) or ("s" in names)
+    e = cfg.moe.n_experts if cfg.moe is not None else 0
+    expert_leaf = (cfg.moe is not None and "mlp" in names
+                   and name in ("w_gate", "w_up", "w_down")
+                   and "shared" not in names)
+
+    msize = mesh_axis_size(mesh, "model")
+
+    def put(dim, axis="model", size=None):
+        if leaf.shape[dim] % (size or msize) == 0:
+            spec[dim] = axis
+
+    if model_ok and not in_recurrent and name not in _REPLICATE:
+        if name == "embed":
+            put(-2)                     # vocab-parallel
+        elif expert_leaf and e % msize == 0:
+            put(-3)                     # expert-parallel
+        elif name in _MODEL_LAST:
+            put(-1)
+        elif name in _MODEL_SECOND:
+            put(-2)
+    # FSDP-over-layers: shard the layer-stack dim over "data" so the layer
+    # scan gathers one layer's weights at a time (fed_axis="pod" archs that
+    # would not otherwise fit, e.g. grok-1-314b).
+    dsize = mesh_axis_size(mesh, "data")
+    if (getattr(cfg, "fsdp_layers", False) and names
+            and names[0] == "blocks" and dsize > 1):
+        ldim = 1 if stacked else 0
+        if ldim < ndim and spec[ldim] is None \
+                and leaf.shape[ldim] % dsize == 0:
+            spec[ldim] = "data"
+    if stacked:        # leaf already carries the leading K dim
+        axes = fed_axes(cfg, mesh)
+        spec[0] = axes if axes else None
+    return P(*spec)
+
+
+def param_shardings(cfg: ModelConfig, params_shape, mesh: Mesh,
+                    stacked: bool = False):
+    """Tree of NamedShardings matching a params(-shaped) tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(cfg, path, leaf, mesh, stacked)),
+        params_shape)
+
+
+def batch_spec(cfg: ModelConfig, mesh: Mesh, stacked: bool = True) -> P:
+    """Spec for token batches: (K, b, S) if stacked else (B, S)."""
+    fa = fed_axes(cfg, mesh)
+    ba = batch_axes(cfg, mesh)
+    if stacked:
+        return P(fa if fa else None, ba if ba else None)
+    # serving: batch over every non-model axis
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return P(axes if axes else None)
+
+
+def cache_shardings(cfg: ModelConfig, cache_shape, mesh: Mesh):
+    """KV/state caches: batch dim over (pod, data); heads/features over
+    model where the layout allows."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    model_ok = mesh_axis_size(mesh, "model") > 1
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        if name in ("pos", "slot_pos"):
+            return NamedSharding(mesh, P())
+        nd = leaf.ndim
+        msize = mesh_axis_size(mesh, "model")
+        bsize = 1
+        for a in axes:
+            bsize *= mesh_axis_size(mesh, a)
+        s = [None] * nd
+        # leading dims: (L, B, ...) for block caches
+        if nd >= 2 and leaf.shape[1] % max(bsize, 1) == 0:
+            s[1] = axes if axes else None
+        if model_ok:
+            if name in ("k", "v") and nd == 5:      # (L,B,W,Hkv,hd)
+                if cfg.n_kv_heads % msize == 0:
+                    s[3] = "model"
+                elif leaf.shape[2] % msize == 0:
+                    s[2] = "model"                  # sequence-sharded cache
+            elif name in ("c", "k_rope") and nd == 4:   # MLA latent (L,B,W,r)
+                if leaf.shape[2] % msize == 0:
+                    s[2] = "model"
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def shard_hint(x, mesh: Mesh, spec: P):
+    """with_sharding_constraint that is a no-op without a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def ctx_mesh():
+    """The mesh installed via jax.set_mesh (None outside a mesh context)."""
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        return m if m and m.shape else None
+    except Exception:
+        return None
+
+
+def maybe_shard(x, *spec):
+    """with_sharding_constraint that no-ops outside a mesh context, so
+    model code can pin layouts for the production mesh without breaking
+    CPU tests."""
+    m = ctx_mesh()
+    if m is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError, TypeError):
+        return x

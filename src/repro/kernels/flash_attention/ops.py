@@ -1,0 +1,37 @@
+"""Jit'd public entry point for flash attention.
+
+Accepts model-layout tensors q: (B, Sq, H, hd), k/v: (B, Sk, Hkv, hd).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_pallas)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _fold(x):
+    B, S, H, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+
+def _unfold(x, B):
+    BH, S, hd = x.shape
+    return x.reshape(B, BH // B, S, hd).transpose(0, 2, 1, 3)
+
+
+def flash_attention(q, k, v, window=None, use_pallas=None, **kw):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    B, Sq, H, hd = q.shape
+    qf, kf, vf = _fold(q), _fold(k), _fold(v)
+    if use_pallas:
+        out = flash_attention_pallas(qf, kf, vf, n_q_heads=H, window=window,
+                                     interpret=not _on_tpu(), **kw)
+    else:
+        out = ref.attention(qf, kf, vf, n_q_heads=H, window=window)
+    return _unfold(out, B)

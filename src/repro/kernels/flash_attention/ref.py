@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash attention (masked softmax, GQA)."""
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, n_q_heads, window=None):
+    """q: (B*H, Sq, hd); k, v: (B*Hkv, Sk, hd) -> (B*H, Sq, hd). Causal."""
+    BH, Sq, hd = q.shape
+    BHkv, Sk, _ = k.shape
+    H = n_q_heads
+    B = BH // H
+    Hkv = BHkv // B
+    G = H // Hkv
+    qf = q.reshape(B, Hkv, G, Sq, hd).astype(jnp.float32)
+    kf = k.reshape(B, Hkv, Sk, hd).astype(jnp.float32)
+    vf = v.reshape(B, Hkv, Sk, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * hd ** -0.5
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= (qpos - kpos) < window
+    s = jnp.where(m, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", w, vf)
+    return o.reshape(BH, Sq, hd).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.pairwise_dist import ops, ref
+from repro.kernels.pairwise_dist.pairwise_dist import (
+    gram, pairwise_sq_dists_pallas)

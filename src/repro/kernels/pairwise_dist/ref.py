@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the pairwise_dist kernel."""
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (K, d) -> (K, K) squared euclidean distances, float32."""
+    x = x.astype(jnp.float32)
+    sq = jnp.sum(x * x, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+    return jnp.maximum(d2, 0.0)

@@ -1,0 +1,2 @@
+from repro.kernels.trimmed_mean import ops, ref
+from repro.kernels.trimmed_mean.trimmed_mean import trimmed_mean_pallas

@@ -1,0 +1,17 @@
+"""Jit'd public entry point for the coordinate-wise trimmed mean."""
+import jax
+
+from repro.kernels.trimmed_mean import ref
+from repro.kernels.trimmed_mean.trimmed_mean import trimmed_mean_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def trimmed_mean(x, n_trim, use_pallas=None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return trimmed_mean_pallas(x, n_trim, interpret=not _on_tpu())
+    return ref.trimmed_mean(x, n_trim)

@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: coordinate-wise trimmed mean over the agent axis.
+
+The robust-aggregation hot-spot for coordinate-wise aggregators: for each of
+d coordinates, drop the n_trim smallest and largest of K agent values and
+average the rest. K is small (<=32); d is the model dimension (billions).
+We tile d into lane-aligned VMEM blocks and compute ranks with an O(K^2)
+comparison network (no sort primitive needed on the VPU), tie-broken by
+agent index exactly as the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tm_kernel(n_trim, K, x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)                  # (Kp, bd)
+    Kp = x.shape[0]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (Kp, 1, 1), 0)
+    valid = (idx < K)
+    big = jnp.float32(3.4e38)
+    xv = jnp.where(valid, x[:, None, :], big)           # pad rows rank last
+    less = (xv < x[None, :, :]) | (
+        (xv == x[None, :, :]) & (idx < idx.transpose(1, 0, 2)))
+    rank = jnp.sum(less.astype(jnp.int32), axis=0)      # (Kp, bd)
+    keep = (rank >= n_trim) & (rank < K - n_trim) & (valid[:, 0, :] >= 1)
+    o_ref[...] = (jnp.sum(jnp.where(keep, x, 0.0), axis=0,
+                          keepdims=True) / (K - 2 * n_trim))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_trim", "block_d", "interpret"))
+def trimmed_mean_pallas(x: jnp.ndarray, n_trim: int, block_d: int = 512,
+                        interpret: bool = True) -> jnp.ndarray:
+    K, d = x.shape
+    Kp = -(-K // 8) * 8
+    dp = -(-d // block_d) * block_d
+    xp = jnp.pad(x, ((0, Kp - K), (0, dp - d)))
+    out = pl.pallas_call(
+        functools.partial(_tm_kernel, n_trim, K),
+        grid=(dp // block_d,),
+        in_specs=[pl.BlockSpec((Kp, block_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, dp), jnp.float32),
+        interpret=interpret,
+    )(xp)
+    return out[0, :d]

@@ -1,0 +1,152 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+  compute term    = per_device_HLO_FLOPs / peak_FLOP/s        [s]
+  memory term     = per_device_HLO_bytes / HBM_bw             [s]
+  collective term = per_device_wire_bytes / ICI_bw            [s]
+
+``cost_analysis()`` on a partitioned module reports PER-DEVICE flops/bytes
+(verified empirically); wire bytes come from parsing the optimized HLO's
+collective ops: per-device ring-schedule bytes moved, derived from each
+collective's output shape and replica-group size:
+
+  all-gather          (g-1)/g * out
+  all-reduce          2 (g-1)/g * out
+  reduce-scatter      (g-1) * out          (input = g * out)
+  all-to-all          (g-1)/g * out
+  collective-permute  out
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s+(\(?[\w\[\],{}\s/*]+?\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUP_RE2 = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_wire_bytes(hlo_text: str,
+                          loop_scale: int = 1) -> Dict[str, float]:
+    """Per-device wire bytes by collective type from optimized HLO text.
+
+    HLO cost analysis visits while-loop (lax.scan) bodies ONCE; collectives
+    that live inside a non-entry computation (the layer scan's body — the
+    per-layer tensor-parallel all-reduces) are therefore scaled by
+    ``loop_scale`` (= the layer-stack trip count). The agreement loop is
+    unrolled at trace time (see gda_agree) so its collectives are exact.
+    """
+    out: Dict[str, float] = {"all-gather": 0.0, "all-reduce": 0.0,
+                             "reduce-scatter": 0.0, "all-to-all": 0.0,
+                             "collective-permute": 0.0}
+    counts: Dict[str, int] = {k: 0 for k in out}
+    in_entry = True
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY "):
+            in_entry = True
+        elif line.startswith("%") and line.rstrip().endswith("{"):
+            in_entry = False               # non-entry computation body
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue                       # counted at -start
+        scale = 1 if in_entry else loop_scale
+        shape_str, op = m.group(1), m.group(2)
+        size = _shape_bytes(shape_str)
+        g = 1
+        gm = _GROUP_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gm2 = _GROUP_RE2.search(line)
+            if gm2:
+                g = len(gm2.group(1).split(","))
+        if g <= 1:
+            continue
+        if op == "all-gather":
+            wire = size * (g - 1) / g
+        elif op == "all-reduce":
+            wire = 2.0 * size * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire = size * (g - 1)
+        elif op == "all-to-all":
+            wire = size * (g - 1) / g
+        else:                              # collective-permute
+            wire = size
+        out[op] += wire * scale
+        counts[op] += 1
+    out["total"] = sum(out.values())
+    out["counts"] = counts
+    return out
+
+
+def roofline_terms(cost: dict, wire: Dict[str, float], n_chips: int,
+                   model_flops_global: float = 0.0,
+                   loop_scale: int = 1) -> dict:
+    """The three §Roofline terms (seconds) + dominant bottleneck.
+
+    HLO flops/bytes from ``cost_analysis`` count while bodies once, so we
+    scale them by ``loop_scale`` (the layer trip count) as an upper proxy
+    and ALSO report the analytic MODEL_FLOPS compute term; the compute term
+    used for the bottleneck is the analytic one (standard MFU practice),
+    with the HLO-derived one kept as a diagnostic.
+    """
+    # HLO flops count while bodies once -> the layer loop is undercounted;
+    # the analytic MODEL_FLOPS term is authoritative for compute. HLO bytes
+    # already include full stacked parameter/activation arrays (read once
+    # per step), so the memory term stays unscaled.
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    t_compute_hlo = flops * loop_scale / PEAK_FLOPS_BF16
+    t_compute = (model_flops_global / n_chips) / PEAK_FLOPS_BF16 \
+        if model_flops_global else t_compute_hlo
+    t_memory = bytes_acc / HBM_BW
+    t_coll = float(wire.get("total", 0.0)) / ICI_BW_PER_LINK
+    terms = {"compute_s": t_compute, "compute_hlo_s": t_compute_hlo,
+             "memory_s": t_memory, "collective_s": t_coll}
+    terms["bottleneck"] = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    terms["flops_per_device"] = flops
+    terms["bytes_per_device"] = bytes_acc
+    terms["wire_bytes_per_device"] = float(wire.get("total", 0.0))
+    return terms
+
+
+def model_flops(cfg, shape, n_tokens=None) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE); decode counts the
+    single generated token per sequence."""
+    if n_tokens is None:
+        if shape.mode == "decode":
+            n_tokens = shape.global_batch           # one token per sequence
+        else:
+            n_tokens = shape.global_batch * shape.seq_len
+    n = cfg.n_active_params()
+    mult = 6.0 if shape.mode == "train" else 2.0
+    return mult * n * n_tokens

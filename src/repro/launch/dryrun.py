@@ -1,0 +1,184 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first initialization).
+
+"""Multi-pod dry-run (deliverable (e)): ``lower().compile()`` every
+(architecture × input shape) program on the production meshes and emit the
+roofline inputs (memory_analysis, cost_analysis, collective wire bytes).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k [--multi-pod] [--out results.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.distributed.fed_trainer import FedConfig, make_fed_step
+from repro.distributed.serving import make_serve_fns, serve_cache_len
+from repro.distributed.sharding import n_agents
+from repro.launch.analysis import (collective_wire_bytes, model_flops,
+                                   roofline_terms)
+from repro.launch.mesh import make_production_mesh
+
+
+def build_lowered(arch: str, shape_name: str, mesh, fed: FedConfig,
+                  dtype=jnp.bfloat16, overrides=None):
+    """Lower the program for one (arch, shape) on the given mesh.
+    overrides: dict of ModelConfig field replacements (perf A/B toggles)."""
+    import dataclasses
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = INPUT_SHAPES[shape_name]
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    key_struct = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    if shape.mode == "train":
+        K = n_agents(cfg, mesh)
+        per_agent = max(shape.global_batch // K, 1)
+        step, state_shape, batch, (state_sh, batch_sh, _) = make_fed_step(
+            cfg, fed, mesh, large=True, dtype=dtype,
+            per_agent_batch=per_agent, seq_len=shape.seq_len)
+        mask = jax.ShapeDtypeStruct((K,), jnp.bool_)
+        return step.lower(state_shape, batch, mask, key_struct), cfg, shape
+
+    B = shape.global_batch
+    prefill_jit, decode_jit, specs = make_serve_fns(
+        cfg, mesh, B, shape.seq_len, dtype=dtype)
+    params_shape = specs["params_shape"]
+    if shape.mode == "prefill":
+        S_text = shape.seq_len - cfg.n_prefix_embeds
+        toks = jax.ShapeDtypeStruct((B, S_text), jnp.int32)
+        if cfg.frontend != "none":
+            pe = jax.ShapeDtypeStruct((B, cfg.n_prefix_embeds, cfg.d_model),
+                                      dtype)
+            return prefill_jit.lower(params_shape, toks, pe), cfg, shape
+        return prefill_jit.lower(params_shape, toks), cfg, shape
+
+    # decode: ONE new token against a cache of seq_len (ring for long ctx)
+    cache_shape = specs["cache_shape"]
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return decode_jit.lower(params_shape, tok, cache_shape), cfg, shape
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            fed: FedConfig, overrides=None) -> dict:
+    rec = {"arch": arch, "shape": shape_name, "overrides": overrides or {},
+           "mesh": "2x16x16" if multi_pod else "16x16", "ok": False}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = mesh.size
+        with jax.set_mesh(mesh):
+            lowered, cfg, shape = build_lowered(arch, shape_name, mesh, fed,
+                                                overrides=overrides)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0 - t_lower, 1)
+        rec["lower_s"] = round(t_lower, 1)
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_per_device_gb": round(
+                (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30,
+                3),
+        }
+        cost = compiled.cost_analysis()
+        from repro.models.model import n_block_stacks
+        loop_scale = n_block_stacks(cfg)
+        wire = collective_wire_bytes(compiled.as_text(),
+                                     loop_scale=loop_scale)
+        mf = model_flops(cfg, shape)
+        terms = roofline_terms(cost, wire, n_chips,
+                               model_flops_global=mf,
+                               loop_scale=loop_scale)
+        terms["model_flops_global"] = mf
+        hlo_global = terms["flops_per_device"] * loop_scale * n_chips
+        terms["useful_ratio"] = round(mf / hlo_global, 4) if hlo_global else 0
+        rec["roofline"] = {k: (round(v, 6) if isinstance(v, float) else v)
+                           for k, v in terms.items()}
+        rec["collectives"] = {k: (int(v) if not isinstance(v, dict) else v)
+                              for k, v in wire.items()}
+        rec["n_agents"] = n_agents(get_config(arch), mesh)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--aggregator", default="rfa")
+    ap.add_argument("--kappa", type=int, default=4)
+    ap.add_argument("--mix-dtype", default=None)
+    ap.add_argument("--mix-block", type=int, default=0)
+    ap.add_argument("--override", default=None,
+                    help="cfg overrides, e.g. fused_rmsnorm=1,mla_absorb=1,"
+                         "recurrent_chunk=128")
+    args = ap.parse_args()
+    overrides = {}
+    if args.override:
+        for kv in args.override.split(","):
+            k, v = kv.split("=")
+            overrides[k] = int(v) if v.lstrip("-").isdigit() else v
+        overrides = {k: (bool(v) if k in ("fused_rmsnorm", "mla_absorb",
+                                          "fsdp_layers") else v)
+                     for k, v in overrides.items()}
+
+    fed = FedConfig(aggregator=args.aggregator, kappa=args.kappa,
+                    mix_dtype=args.mix_dtype, mix_block=args.mix_block)
+    pairs = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    for a in archs:
+        for s in shapes:
+            pairs.append((a, s))
+
+    results = []
+    for a, s in pairs:
+        rec = run_one(a, s, args.multi_pod, fed, overrides=overrides)
+        status = "OK " if rec["ok"] else "FAIL"
+        extra = ""
+        if rec["ok"]:
+            r = rec["roofline"]
+            extra = (f"bottleneck={r['bottleneck']} "
+                     f"mem/dev={rec['memory']['peak_per_device_gb']}GB "
+                     f"compile={rec['compile_s']}s")
+        else:
+            extra = rec["error"][:160]
+        print(f"[{status}] {a:22s} {s:12s} {rec['mesh']:8s} {extra}",
+              flush=True)
+        results.append(rec)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    n_ok = sum(r["ok"] for r in results)
+    print(f"{n_ok}/{len(results)} lowered+compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh construction (DESIGN.md §6).
+
+A FUNCTION (not a module constant) so importing never touches jax device
+state. Single pod: (16, 16) ("data", "model") = 256 chips of TPU v5e.
+Multi-pod: (2, 16, 16) ("pod", "data", "model") = 512 chips; the "pod"
+axis crosses the DCN boundary — exactly where the federation sits for the
+large architectures (fed_axis="pod").
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, multi_pod=False):
+    """Small mesh for CPU tests (requires enough fake devices)."""
+    if multi_pod:
+        return jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW_PER_LINK = 50e9            # B/s per link

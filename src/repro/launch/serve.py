@@ -1,0 +1,63 @@
+"""Serving driver: batched prefill + greedy decode (deliverable (b)).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, reduced
+from repro.models.model import decode_step, init_params, prefill
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    B, S = args.batch, args.prompt_len
+    prompts = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    pe = None
+    if cfg.frontend != "none":
+        pe = jax.random.normal(key, (B, cfg.n_prefix_embeds, cfg.d_model))
+
+    cache_len = S + cfg.n_prefix_embeds + args.gen
+    prefill_jit = jax.jit(lambda p, t, e: prefill(
+        cfg, p, t, e, cache_len=cache_len))
+    decode_jit = jax.jit(lambda p, t, c: decode_step(cfg, p, t, c))
+
+    t0 = time.time()
+    logits, cache = prefill_jit(params, prompts, pe)
+    tok = jnp.argmax(logits[:, -1], axis=-1)
+    t_prefill = time.time() - t0
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        logits, cache = decode_jit(params, tok, cache)
+        tok = jnp.argmax(logits[:, 0], axis=-1)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    gen = jnp.stack(out, axis=1)
+    print(f"arch={cfg.name} batch={B} prompt={S} gen={args.gen}")
+    print(f"prefill: {t_prefill*1e3:.1f} ms   decode: "
+          f"{t_decode / max(args.gen - 1, 1) * 1e3:.2f} ms/token")
+    for b in range(min(B, 2)):
+        print(f"  seq{b}: {list(map(int, gen[b][:12]))}")
+
+
+if __name__ == "__main__":
+    main()

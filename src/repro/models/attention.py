@@ -1,0 +1,276 @@
+"""Attention: GQA (full / chunked / sliding-window) and MLA, with caches.
+
+All functions are shape-polymorphic in batch and sequence; the decode path
+uses a ring-buffer KV cache so a sliding-window variant is sub-quadratic in
+both compute and memory (long_500k).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA parameter init
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd), dtype),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * hd), dtype),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * hd), dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def init_mla(key, cfg, dtype):
+    a = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk_hd = a.qk_nope_head_dim + a.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "w_dkv": dense_init(ks[0], (d, a.kv_lora_rank + a.qk_rope_head_dim),
+                            dtype),
+        "w_uk": dense_init(ks[1], (a.kv_lora_rank, H * a.qk_nope_head_dim),
+                           dtype),
+        "w_uv": dense_init(ks[2], (a.kv_lora_rank, H * a.v_head_dim), dtype),
+        "wo": dense_init(ks[3], (H * a.v_head_dim, d), dtype),
+    }
+    if a.q_lora_rank:
+        p["w_dq"] = dense_init(ks[4], (d, a.q_lora_rank), dtype)
+        p["w_uq"] = dense_init(ks[5], (a.q_lora_rank, H * qk_hd), dtype)
+    else:
+        p["wq"] = dense_init(ks[4], (d, H * qk_hd), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core masked attention (einsum-grouped GQA: no kv repeat materialization)
+# ---------------------------------------------------------------------------
+
+def _grouped_attn(q, k, v, mask):
+    """q: (B,Sq,Hkv,G,hd); k,v: (B,Sk,Hkv,hd); mask: (B,1,1,Sq,Sk) bool."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (hd ** -0.5)
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v)
+    return out
+
+
+def chunked_causal_attention(q, k, v, q_pos, k_pos,
+                             window: Optional[int] = None,
+                             chunk: int = 1024):
+    """Causal (optionally sliding-window) attention, scanned over q chunks.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, Hkv, hd); q_pos: (Sq,), k_pos: (Sk,).
+    Scores for one chunk are (B, H, chunk, Sk) — never Sq x Sk. KV heads are
+    repeated to H (same footprint as q) so the score tensor shards over the
+    full query-head dim; each chunk body is rematerialized so the backward
+    never holds more than one chunk's scores.
+    """
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    chunk = min(chunk, Sq)
+    pad = (-Sq) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad), constant_values=-1)
+    n = q.shape[1] // chunk
+    qc = q.reshape(B, n, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    pc = q_pos.reshape(n, chunk)
+    scale = hd ** -0.5
+
+    @jax.checkpoint
+    def body(_, xs):
+        qi, pi = xs                                  # (B, chunk, H, hd)
+        m = pi[:, None] >= k_pos[None, :]
+        if window is not None:
+            m &= (pi[:, None] - k_pos[None, :]) < window
+        s = jnp.einsum("bqhd,bkhd->bhqk", qi, k,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(m[None, None], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return None, jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+    _, out = jax.lax.scan(body, None, (qc, pc))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, n * chunk, H, -1)
+    return out[:, :Sq]
+
+
+def cache_attention(q, k_cache, v_cache, q_pos, slot_pos,
+                    window: Optional[int] = None):
+    """Single-step decode attention over a ring cache.
+
+    q: (B, 1, H, hd); k_cache/v_cache: (B, W, Hkv, hd); slot_pos: (W,) int32
+    holding the absolute position stored in each slot (-1 = empty).
+    """
+    B, _, H, hd = q.shape
+    Hkv = k_cache.shape[2]
+    qg = q.reshape(B, 1, Hkv, H // Hkv, hd)
+    m = (slot_pos >= 0) & (slot_pos <= q_pos)
+    if window is not None:
+        m &= (q_pos - slot_pos) < window
+    m = m[None, None, None, None, :]                  # (1,1,1,1,W)
+    out = _grouped_attn(qg, k_cache, v_cache, m)
+    return out.reshape(B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# GQA block forward (train/prefill) and decode step
+# ---------------------------------------------------------------------------
+
+def _qkv(p, cfg, x):
+    hd = cfg.resolved_head_dim
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def gqa_forward(p, cfg, x, positions, window=None):
+    """x: (B,S,D), positions: (S,) -> (B,S,D). No cache."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = chunked_causal_attention(q, k, v, positions, positions,
+                                   window=window or cfg.sliding_window)
+    return out.reshape(B, S, -1) @ p["wo"], (k, v)
+
+
+def gqa_decode(p, cfg, x, pos, cache_kv, slot_pos, window=None):
+    """x: (B,1,D); cache_kv: dict(k=(B,W,Hkv,hd), v=...); slot_pos: (W,)
+    already updated to include ``pos`` at slot ``pos % W``."""
+    B = x.shape[0]
+    q, k, v = _qkv(p, cfg, x)
+    pos_arr = pos[None] if pos.ndim == 0 else pos
+    q = apply_rope(q, pos_arr, cfg.rope_theta)
+    k = apply_rope(k, pos_arr, cfg.rope_theta)
+    W = cache_kv["k"].shape[1]
+    idx = pos % W
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache_kv["k"], k, idx, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache_kv["v"], v, idx, axis=1)
+    out = cache_attention(q, new_k, new_v, pos, slot_pos,
+                          window=window or cfg.sliding_window)
+    return out.reshape(B, 1, -1) @ p["wo"], {"k": new_k, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# MLA forward / decode (latent cache; optional absorbed matmuls for decode)
+# ---------------------------------------------------------------------------
+
+def _mla_q(p, cfg, x, positions):
+    a = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    qk_hd = a.qk_nope_head_dim + a.qk_rope_head_dim
+    if a.q_lora_rank:
+        q = (x @ p["w_dq"]) @ p["w_uq"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(B, S, H, qk_hd)
+    q_nope = q[..., :a.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., a.qk_nope_head_dim:], positions,
+                        cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, cfg, x, positions):
+    a = cfg.mla
+    ckv = x @ p["w_dkv"]                              # (B,S,r+rope)
+    c = ckv[..., :a.kv_lora_rank]
+    k_rope = apply_rope(ckv[..., None, a.kv_lora_rank:], positions,
+                        cfg.rope_theta)               # (B,S,1,rope)
+    return c, k_rope[..., 0, :]
+
+
+def mla_forward(p, cfg, x, positions, window=None):
+    a = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c, k_rope = _mla_latent(p, cfg, x, positions)
+    k_nope = (c @ p["w_uk"]).reshape(B, S, H, a.qk_nope_head_dim)
+    v = (c @ p["w_uv"]).reshape(B, S, H, a.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                  (B, S, H, a.qk_rope_head_dim))], axis=-1)
+    out = chunked_causal_attention(q, k, v, positions, positions,
+                                   window=window)
+    return out.reshape(B, S, -1) @ p["wo"], (c, k_rope)
+
+
+def mla_decode(p, cfg, x, pos, cache, slot_pos, window=None, absorb=True):
+    """Latent-cache decode. cache: dict(c=(B,W,r), k_rope=(B,W,rope)).
+
+    absorb=True uses the DeepSeek weight-absorption identity so the per-step
+    cost is O(W * (r + rope) * H) instead of expanding full K/V from the
+    latent each step (see EXPERIMENTS.md §Perf).
+    """
+    a = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    pos_arr = pos[None] if pos.ndim == 0 else pos
+    q_nope, q_rope = _mla_q(p, cfg, x, pos_arr)       # (B,1,H,*)
+    c_t, kr_t = _mla_latent(p, cfg, x, pos_arr)
+    W = cache["c"].shape[1]
+    idx = pos % W
+    c = jax.lax.dynamic_update_slice_in_dim(cache["c"], c_t, idx, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_t, idx,
+                                                 axis=1)
+    m = (slot_pos >= 0) & (slot_pos <= pos)
+    if window is not None:
+        m &= (pos - slot_pos) < window
+
+    scale = (a.qk_nope_head_dim + a.qk_rope_head_dim) ** -0.5
+    if absorb:
+        w_uk = p["w_uk"].reshape(a.kv_lora_rank, H, a.qk_nope_head_dim)
+        q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+        s = jnp.einsum("bqhr,bkr->bhqk", q_lat, c,
+                       preferred_element_type=jnp.float32)
+        s += jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope,
+                        preferred_element_type=jnp.float32)
+        s = jnp.where(m[None, None, None, :], s * scale, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(c.dtype)
+        o_lat = jnp.einsum("bhqk,bkr->bqhr", w, c)
+        w_uv = p["w_uv"].reshape(a.kv_lora_rank, H, a.v_head_dim)
+        out = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_uv)
+    else:
+        k_nope = (c @ p["w_uk"]).reshape(B, W, H, a.qk_nope_head_dim)
+        v = (c @ p["w_uv"]).reshape(B, W, H, a.v_head_dim)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope,
+                       preferred_element_type=jnp.float32)
+        s += jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope,
+                        preferred_element_type=jnp.float32)
+        s = jnp.where(m[None, None, None, :], s * scale, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    out = out.reshape(B, 1, -1) @ p["wo"]
+    return out, {"c": c, "k_rope": k_rope}

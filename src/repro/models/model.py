@@ -1,0 +1,366 @@
+"""Composable decoder model: init / forward / prefill / decode for all
+assigned architecture families, with scan-over-layers stacked parameters.
+
+Families
+--------
+dense / vlm / audio : [norm -> GQA|MLA -> +res -> norm -> SwiGLU -> +res]
+moe                 : as dense but MLP is the sort-dispatch MoE
+hybrid (hymba)      : [norm -> (attn + mamba)/2 -> +res -> norm -> SwiGLU -> +res]
+ssm (xlstm)         : alternating [mLSTM, sLSTM] residual blocks, no FFN
+
+Caches: attention layers use a ring-buffer KV (or MLA latent) cache whose
+size *is* the attention window — long_500k decode simply allocates a
+``long_context_window``-sized ring. Recurrent layers carry O(1) state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import dense_init, init_swiglu, rms_norm, swiglu
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ModelConfig, key, dtype):
+    """One decoder block's parameters (unstacked)."""
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {"norm_attn": jnp.ones((d,), dtype),
+         "norm_mlp": jnp.ones((d,), dtype)}
+    if cfg.mla is not None:
+        p["attn"] = attn.init_mla(ks[0], cfg, dtype)
+    else:
+        p["attn"] = attn.init_gqa(ks[0], cfg, dtype)
+    if cfg.moe is not None:
+        p["mlp"] = moe_lib.init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = init_swiglu(ks[1], d, cfg.d_ff, dtype)
+    if cfg.family == "hybrid":
+        p["ssm"] = ssm_lib.init_mamba(ks[2], cfg, dtype)
+    return p
+
+
+def _init_xlstm_pair(cfg: ModelConfig, key, dtype):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "m": ssm_lib.init_mlstm(k1, cfg, dtype),
+        "s": ssm_lib.init_slstm(k2, cfg, dtype),
+        "norm_m": jnp.ones((d,), dtype),
+        "norm_s": jnp.ones((d,), dtype),
+    }
+
+
+def n_block_stacks(cfg: ModelConfig) -> int:
+    if cfg.family == "ssm":
+        return cfg.n_layers // cfg.xlstm.slstm_every
+    return cfg.n_layers
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    k_emb, k_blocks, k_head, k_proj = jax.random.split(key, 4)
+    d = cfg.d_model
+    params = {
+        "embed": 0.02 * jax.random.normal(k_emb, (cfg.vocab_size, d), dtype),
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    nb = n_block_stacks(cfg)
+    init_one = (functools.partial(_init_xlstm_pair, cfg, dtype=dtype)
+                if cfg.family == "ssm"
+                else functools.partial(_init_block, cfg, dtype=dtype))
+    params["blocks"] = jax.vmap(init_one)(jax.random.split(k_blocks, nb))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (d, cfg.vocab_size), dtype)
+    if cfg.frontend != "none":
+        params["frontend_proj"] = dense_init(k_proj, (d, d), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg, params, tokens, prefix_embeds=None):
+    """tokens: (B, S_text) int32; prefix_embeds: (B, P, D) or None."""
+    x = params["embed"][tokens]
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(x.dtype) @ params["frontend_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def lm_logits(cfg, params, x):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ w
+
+
+# ---------------------------------------------------------------------------
+# Sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_seq(cfg, p, x, positions, window):
+    """One block over a full sequence. Returns (x, cache_parts, aux)."""
+    h = rms_norm(x, p["norm_attn"], cfg.norm_eps, cfg.fused_rmsnorm)
+    if cfg.mla is not None:
+        a_out, kv = attn.mla_forward(p["attn"], cfg, h, positions,
+                                     window=window)
+        cache = {"c": kv[0], "k_rope": kv[1]}
+    else:
+        a_out, kv = attn.gqa_forward(p["attn"], cfg, h, positions,
+                                     window=window)
+        cache = {"k": kv[0], "v": kv[1]}
+    if cfg.family == "hybrid":
+        s_out, s_state = ssm_lib.mamba_forward(p["ssm"], cfg, h)
+        a_out = (a_out + s_out) * 0.5
+        cache = {"kv": cache, "ssm": s_state}
+    else:
+        cache = {"kv": cache}
+    x = x + a_out
+    h = rms_norm(x, p["norm_mlp"], cfg.norm_eps, cfg.fused_rmsnorm)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        m_out, aux = moe_lib.moe_forward(p["mlp"], cfg, h)
+    else:
+        m_out = swiglu(h, **p["mlp"])
+    return x + m_out, cache, aux
+
+
+def _xlstm_pair_seq(cfg, p, x, state=None):
+    sm = None if state is None else state["m"]
+    ss = None if state is None else state["s"]
+    h, new_m = ssm_lib.mlstm_forward(
+        p["m"], cfg, rms_norm(x, p["norm_m"], cfg.norm_eps, cfg.fused_rmsnorm), sm)
+    x = x + h
+    h, new_s = ssm_lib.slstm_forward(
+        p["s"], cfg, rms_norm(x, p["norm_s"], cfg.norm_eps, cfg.fused_rmsnorm), ss)
+    return x + h, {"m": new_m, "s": new_s}
+
+
+def forward(cfg: ModelConfig, params, tokens=None, prefix_embeds=None,
+            positions=None, window: Optional[int] = None,
+            collect_cache: bool = False, remat: bool = True,
+            last_only: bool = False):
+    """Full-sequence forward. Returns (logits, aux, cache_parts|None).
+
+    cache_parts has per-layer leading axis (stacked by the layer scan).
+    ``remat`` checkpoints each layer in the scan (recompute in backward) —
+    without it the attention backward stores O(S²) softmax weights per layer.
+    """
+    x = embed_inputs(cfg, params, tokens, prefix_embeds)
+    S = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+
+    if cfg.family == "ssm":
+        def body(carry, bp):
+            h, _ = carry
+            h, st = _xlstm_pair_seq(cfg, bp, h)
+            return (h, jnp.zeros((), jnp.float32)), st
+        if remat:
+            body = jax.checkpoint(body)
+        (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                        params["blocks"])
+    else:
+        def body(carry, bp):
+            h, aux = carry
+            h, cache, a = _block_seq(cfg, bp, h, positions, window)
+            return (h, aux + a), cache if collect_cache else None
+        if remat:
+            body = jax.checkpoint(body)
+        (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                        params["blocks"])
+
+    if last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.fused_rmsnorm)
+    logits = lm_logits(cfg, params, x)
+    return logits, aux, caches
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.float32):
+    """Empty decode cache. ``cache_len`` is the KV ring size (= the attention
+    window when smaller than the total sequence)."""
+    nb = n_block_stacks(cfg)
+
+    def stack(tree):
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (nb,) + x.shape),
+                            tree)
+
+    cache = {"pos": jnp.zeros((), jnp.int32),
+             "slot_pos": jnp.full((cache_len,), -1, jnp.int32)}
+    if cfg.family == "ssm":
+        cache["blocks"] = stack({
+            "m": ssm_lib.init_mlstm_state(cfg, batch, dtype),
+            "s": ssm_lib.init_slstm_state(cfg, batch, dtype)})
+        return cache
+    hd = cfg.resolved_head_dim
+    if cfg.mla is not None:
+        kv = {"c": jnp.zeros((batch, cache_len, cfg.mla.kv_lora_rank), dtype),
+              "k_rope": jnp.zeros((batch, cache_len,
+                                   cfg.mla.qk_rope_head_dim), dtype)}
+    else:
+        kv = {"k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype),
+              "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype)}
+    block_cache = {"kv": kv}
+    if cfg.family == "hybrid":
+        block_cache["ssm"] = ssm_lib.init_mamba_state(cfg, batch, dtype)
+    cache["blocks"] = stack(block_cache)
+    return cache
+
+
+def prefill(cfg: ModelConfig, params, tokens=None, prefix_embeds=None,
+            cache_len: Optional[int] = None, window: Optional[int] = None,
+            last_only: bool = True):
+    """Run the prompt, build the decode cache. Returns (logits, cache)."""
+    logits, _, caches = forward(cfg, params, tokens, prefix_embeds,
+                                window=window, collect_cache=True,
+                                last_only=last_only)
+    S = (tokens.shape[1] if tokens is not None else 0) + \
+        (prefix_embeds.shape[1] if prefix_embeds is not None else 0)
+    cache_len = cache_len or S
+
+    if cfg.family == "ssm":
+        return logits, {"pos": jnp.asarray(S, jnp.int32),
+                        "slot_pos": jnp.zeros((cache_len,), jnp.int32),
+                        "blocks": caches}
+
+    def fit(x):
+        # seq axis is axis=2 of the stacked (L, B, S, ...) kv tensors
+        if x.ndim >= 3 and x.shape[2] == S:
+            x = x[:, :, -cache_len:] if S >= cache_len else jnp.pad(
+                x, [(0, 0), (0, 0), (0, cache_len - S)]
+                + [(0, 0)] * (x.ndim - 3))
+        return x
+
+    blocks = {}
+    kv = jax.tree.map(fit, caches["kv"])
+    blocks["kv"] = kv
+    if cfg.family == "hybrid":
+        blocks["ssm"] = caches["ssm"]
+    keep = min(S, cache_len)
+    slot_pos = jnp.full((cache_len,), -1, jnp.int32)
+    slot_pos = slot_pos.at[:keep].set(jnp.arange(S - keep, S))
+    # ring alignment: continue writing at pos % cache_len; after prefill the
+    # next write index is S % cache_len, which must be the oldest slot.
+    # Roll stored entries so that slot (pos % W) is the oldest.
+    if keep == cache_len:
+        shift = 0  # slots 0..W-1 hold positions S-W..S-1; next idx = S % W
+        roll = (S % cache_len)
+        kv = jax.tree.map(lambda x: jnp.roll(x, roll, axis=2), kv)
+        slot_pos = jnp.roll(slot_pos, roll)
+        blocks["kv"] = kv
+        del shift
+    return logits, {"pos": jnp.asarray(S, jnp.int32), "slot_pos": slot_pos,
+                    "blocks": blocks}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def _block_decode(cfg, p, x, pos, slot_pos, cache):
+    h = rms_norm(x, p["norm_attn"], cfg.norm_eps, cfg.fused_rmsnorm)
+    if cfg.mla is not None:
+        a_out, new_kv = attn.mla_decode(p["attn"], cfg, h, pos, cache["kv"],
+                                        slot_pos, absorb=cfg.mla_absorb)
+    else:
+        a_out, new_kv = attn.gqa_decode(p["attn"], cfg, h, pos, cache["kv"],
+                                        slot_pos)
+    new_cache = {"kv": new_kv}
+    if cfg.family == "hybrid":
+        s_out, new_ssm = ssm_lib.mamba_decode(p["ssm"], cfg, h, cache["ssm"])
+        a_out = (a_out + s_out) * 0.5
+        new_cache["ssm"] = new_ssm
+    x = x + a_out
+    h = rms_norm(x, p["norm_mlp"], cfg.norm_eps, cfg.fused_rmsnorm)
+    if cfg.moe is not None:
+        m_out, _ = moe_lib.moe_forward(p["mlp"], cfg, h)
+    else:
+        m_out = swiglu(h, **p["mlp"])
+    return x + m_out, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, token, cache):
+    """token: (B,) or (B,1) int32. Returns (logits (B,1,V), new cache)."""
+    if token.ndim == 1:
+        token = token[:, None]
+    x = params["embed"][token]
+    pos = cache["pos"]
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            bp, bc = xs
+            hh, st_m = ssm_lib.mlstm_forward(
+                bp["m"], cfg, rms_norm(h, bp["norm_m"], cfg.norm_eps, cfg.fused_rmsnorm),
+                bc["m"])
+            h = h + hh
+            hh, st_s = ssm_lib.slstm_forward(
+                bp["s"], cfg, rms_norm(h, bp["norm_s"], cfg.norm_eps, cfg.fused_rmsnorm),
+                bc["s"])
+            return h + hh, {"m": st_m, "s": st_s}
+        x, new_blocks = jax.lax.scan(body, x,
+                                     (params["blocks"], cache["blocks"]))
+        new_cache = {"pos": pos + 1, "slot_pos": cache["slot_pos"],
+                     "blocks": new_blocks}
+    else:
+        W = cache["slot_pos"].shape[0]
+        slot_pos = cache["slot_pos"].at[pos % W].set(pos)
+
+        def body(h, xs):
+            bp, bc = xs
+            return _block_decode(cfg, bp, h, pos, slot_pos, bc)
+        x, new_blocks = jax.lax.scan(body, x,
+                                     (params["blocks"], cache["blocks"]))
+        new_cache = {"pos": pos + 1, "slot_pos": slot_pos,
+                     "blocks": new_blocks}
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.fused_rmsnorm)
+    return lm_logits(cfg, params, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def _cross_entropy(logits, labels):
+    """Sharding-friendly CE: reductions over the (vocab-sharded) last axis
+    only — never gathers logits (the take_along_axis formulation forces an
+    all-gather of vocab-parallel logits under GSPMD)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    correct = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits,
+                                0.0), axis=-1)
+    return jnp.mean(lse - correct)
+
+
+def lm_loss_labeled(cfg: ModelConfig, params, tokens, labels,
+                    prefix_embeds=None):
+    """CE of logits at every token position vs. given labels (+ MoE aux).
+    Processes exactly ``tokens.shape[1] (+ prefix)`` positions."""
+    logits, aux, _ = forward(cfg, params, tokens, prefix_embeds)
+    P = 0 if prefix_embeds is None else prefix_embeds.shape[1]
+    return _cross_entropy(logits[:, P:], labels) + aux
+
+
+def lm_loss(cfg: ModelConfig, params, tokens, prefix_embeds=None):
+    """Next-token cross-entropy (+ MoE aux). tokens: (B, S_text)."""
+    logits, aux, _ = forward(cfg, params, tokens[:, :-1], prefix_embeds)
+    P = 0 if prefix_embeds is None else prefix_embeds.shape[1]
+    return _cross_entropy(logits[:, P:], tokens[:, 1:]) + aux

@@ -1,0 +1,100 @@
+"""Mixture-of-Experts with sort-based grouped dispatch.
+
+FLOP-honest on the compiled dry-run: dispatch/combine are gathers/scatters
+(zero matmul FLOPs); expert compute is a single batched einsum over
+(E, capacity) buffers, so HLO_FLOPs track 6*N_active*D instead of the
+T x E x C dense-dispatch blowup of mask-einsum MoE implementations.
+
+Routing/dispatch is PER BATCH ROW (vmapped): the sort, rank and scatter
+stay local to each row's tokens, so under pjit the (B, E, C, D) dispatch
+buffers shard over the batch axes and the expert-weight gradients keep
+their model sharding. (A global argsort over all B*S tokens forces the
+SPMD partitioner to replicate the dispatch, which turns the per-layer
+gradient all-reduce into a full-tensor reduction — 16x the wire at grok-1
+scale; see EXPERIMENTS.md §Perf.)
+
+Sharding: expert weights carry a leading E axis. For E >= mesh model-axis
+size the experts shard over "model" (expert parallelism); for small E
+(grok: 8) the per-expert ffn dim shards over "model" (tensor parallelism
+within experts).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_swiglu, swiglu
+
+
+def init_moe(key, cfg, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, m.n_experts), jnp.float32),
+        "w_gate": dense_init(ks[1], (m.n_experts, d, m.d_ff_expert), dtype),
+        "w_up": dense_init(ks[2], (m.n_experts, d, m.d_ff_expert), dtype),
+        "w_down": dense_init(ks[3], (m.n_experts, m.d_ff_expert, d), dtype),
+    }
+    if m.n_shared_experts:
+        p["shared"] = init_swiglu(ks[4], d,
+                                  m.n_shared_experts * m.d_ff_expert, dtype)
+    return p
+
+
+def _moe_tokens(p, cfg, xf):
+    """One row's tokens. xf: (T, D) -> (y (T, D), aux scalar)."""
+    m = cfg.moe
+    T, D = xf.shape
+
+    logits = (xf @ p["router"]).astype(jnp.float32)       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, m.top_k)          # (T, k)
+    top_w = top_w / (jnp.sum(top_w, axis=-1, keepdims=True) + 1e-9)
+
+    # ---- load-balance auxiliary loss (Switch-style) ----
+    me = jnp.mean(probs, axis=0)                          # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(top_e, m.n_experts, dtype=jnp.float32).sum(1), axis=0
+    ) / m.top_k
+    aux = m.router_aux_weight * m.n_experts * jnp.sum(me * ce)
+
+    # ---- sort-based grouped dispatch (local to this row) ----
+    cap = int(T * m.top_k * m.capacity_factor / m.n_experts + 1)
+    e_flat = top_e.reshape(-1)                            # (T*k,)
+    t_flat = jnp.repeat(jnp.arange(T), m.top_k)
+    w_flat = top_w.reshape(-1)
+    order = jnp.argsort(e_flat)
+    e_s, t_s, w_s = e_flat[order], t_flat[order], w_flat[order]
+    # rank of each entry within its expert group
+    same = jax.nn.one_hot(e_s, m.n_experts, dtype=jnp.int32)  # (T*k, E)
+    rank = (jnp.cumsum(same, axis=0) * same).sum(-1) - 1      # (T*k,)
+    keep = rank < cap
+    slot = jnp.where(keep, e_s * cap + rank, m.n_experts * cap)
+    # buffers: token index per (expert, cap) slot; pad row = T
+    buf_tok = jnp.full((m.n_experts * cap + 1,), T, jnp.int32
+                       ).at[slot].set(t_s.astype(jnp.int32))[:-1]
+    buf_w = jnp.zeros((m.n_experts * cap + 1,), jnp.float32
+                      ).at[slot].set(jnp.where(keep, w_s, 0.0))[:-1]
+    buf_tok = buf_tok.reshape(m.n_experts, cap)
+    buf_w = buf_w.reshape(m.n_experts, cap)
+
+    xpad = jnp.concatenate([xf, jnp.zeros((1, D), xf.dtype)], axis=0)
+    xe = xpad[buf_tok]                                    # (E, C, D)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, p["w_up"])       # compute dtype
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])       # (E, C, D)
+    ye = ye * buf_w[..., None].astype(ye.dtype)
+
+    y = jnp.zeros((T + 1, D), ye.dtype).at[buf_tok.reshape(-1)].add(
+        ye.reshape(-1, D))[:T]
+
+    if m.n_shared_experts:
+        y = y + swiglu(xf, **p["shared"])
+    return y, aux
+
+
+def moe_forward(p, cfg, x):
+    """x: (B, S, D) -> (y, aux_loss). Per-row routing (see module doc)."""
+    y, aux = jax.vmap(lambda row: _moe_tokens(p, cfg, row))(x)
+    return y, jnp.mean(aux)

@@ -1,0 +1,267 @@
+"""Recurrent blocks: Mamba-style selective SSM, mLSTM, sLSTM.
+
+Each block provides (a) a sequence forward via ``lax.scan`` over time used by
+train/prefill, and (b) a single-step decode update over a small carried
+state — this is what makes long_500k decode O(1) per token for the
+ssm/hybrid architectures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d, dense_init
+
+
+def time_scan(step, carry, xs, chunk: int = 0):
+    """lax.scan over time with optional chunked rematerialization.
+
+    With ``chunk > 0`` the scan runs as an outer loop over S/chunk blocks
+    whose bodies are ``jax.checkpoint``-ed inner scans: the backward pass
+    stores the recurrent carry only at chunk boundaries and recomputes
+    within a chunk (O(S/chunk) instead of O(S) state snapshots — the
+    dominant training-memory term for mLSTM's matrix memory).
+    xs leaves are time-major: (S, ...).
+    """
+    if chunk <= 0:
+        return jax.lax.scan(step, carry, xs)
+    S = jax.tree.leaves(xs)[0].shape[0]
+    if S % chunk or S <= chunk:
+        return jax.lax.scan(step, carry, xs)
+    n = S // chunk
+    xs_c = jax.tree.map(
+        lambda l: l.reshape((n, chunk) + l.shape[1:]), xs)
+
+    @jax.checkpoint
+    def outer(c, xc):
+        return jax.lax.scan(step, c, xc)
+
+    carry, ys = jax.lax.scan(outer, carry, xs_c)
+    ys = jax.tree.map(lambda l: l.reshape((S,) + l.shape[2:]), ys)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (used standalone and inside hybrid blocks)
+# ---------------------------------------------------------------------------
+
+def _dt_rank(cfg):
+    return cfg.ssm.dt_rank or -(-cfg.d_model // 16)
+
+
+def init_mamba(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    dtr = _dt_rank(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * d_in), dtype),
+        "conv_w": dense_init(ks[1], (s.conv_dim, d_in), dtype, scale=0.5),
+        "w_xdb": dense_init(ks[2], (d_in, dtr + 2 * s.state_dim), dtype),
+        "w_dt": dense_init(ks[3], (dtr, d_in), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (d_in,),
+                                       minval=jnp.log(1e-3),
+                                       maxval=jnp.log(1e-1))))).astype(dtype),
+        "A_log": jnp.log(jnp.tile(
+            jnp.arange(1, s.state_dim + 1, dtype=jnp.float32),
+            (d_in, 1))).astype(jnp.float32),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "w_out": dense_init(ks[6], (d_in, d), dtype),
+    }
+
+
+def _mamba_inner(p, cfg, xz, conv_state):
+    """xz: (B, S, 2*d_in) pre-projected. Returns gatable y and new conv state."""
+    s = cfg.ssm
+    d_in = xz.shape[-1] // 2
+    x, z = jnp.split(xz, 2, axis=-1)
+    x, new_conv = causal_conv1d(x, p["conv_w"], conv_state)
+    x = jax.nn.silu(x)
+    xdb = x @ p["w_xdb"]
+    dtr = _dt_rank(cfg)
+    dt = jax.nn.softplus(xdb[..., :dtr] @ p["w_dt"]
+                         + p["dt_bias"]).astype(jnp.float32)   # (B,S,d_in)
+    Bm = xdb[..., dtr:dtr + s.state_dim].astype(jnp.float32)   # (B,S,N)
+    Cm = xdb[..., dtr + s.state_dim:].astype(jnp.float32)      # (B,S,N)
+    A = -jnp.exp(p["A_log"])                                   # (d_in,N)
+    return x, z, dt, Bm, Cm, A, new_conv
+
+
+def mamba_forward(p, cfg, x, state=None):
+    """x: (B,S,D) -> (y, (ssm_state, conv_state))."""
+    B, S, D = x.shape
+    s = cfg.ssm
+    d_in = s.expand * D
+    xz = x @ p["w_in"]
+    conv_state = None if state is None else state["conv"]
+    h0 = (jnp.zeros((B, d_in, s.state_dim), jnp.float32)
+          if state is None else state["h"])
+    xc, z, dt, Bm, Cm, A, new_conv = _mamba_inner(p, cfg, xz, conv_state)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp                       # (B,d_in),(B,d_in),(B,N)x2
+        dA = jnp.exp(dt_t[..., None] * A)               # (B,d_in,N)
+        dBx = dt_t[..., None] * B_t[:, None, :] * x_t[..., None]
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xs = (xc.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0, 2), Bm.transpose(1, 0, 2),
+          Cm.transpose(1, 0, 2))
+    h, ys = time_scan(step, h0, xs, chunk=cfg.recurrent_chunk)
+    y = ys.transpose(1, 0, 2) + xc.astype(jnp.float32) * p["D"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    return y, {"h": h, "conv": new_conv}
+
+
+def mamba_decode(p, cfg, x, state):
+    """x: (B,1,D); state: {'h': (B,d_in,N), 'conv': (B,K-1,d_in)}."""
+    y, new_state = mamba_forward(p, cfg, x, state)
+    return y, new_state
+
+
+def init_mamba_state(cfg, batch, dtype):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    return {"h": jnp.zeros((batch, d_in, s.state_dim), jnp.float32),
+            "conv": jnp.zeros((batch, s.conv_dim - 1, d_in), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory) — xLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg, dtype):
+    x = cfg.xlstm
+    d = cfg.d_model
+    d_in = int(d * x.proj_factor)
+    hd = d_in // cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * d_in), dtype),
+        "conv_w": dense_init(ks[1], (x.conv_dim, d_in), dtype, scale=0.5),
+        "wq": dense_init(ks[2], (d_in, d_in), dtype),
+        "wk": dense_init(ks[3], (d_in, d_in), dtype),
+        "wv": dense_init(ks[4], (d_in, d_in), dtype),
+        "w_if": dense_init(ks[5], (d_in, 2 * cfg.n_heads), dtype),
+        "b_if": jnp.concatenate([jnp.zeros((cfg.n_heads,)),
+                                 3.0 * jnp.ones((cfg.n_heads,))]).astype(dtype),
+        "w_o": dense_init(ks[6], (d_in, d_in), dtype),
+        "w_down": dense_init(ks[7], (d_in, d), dtype),
+    }
+
+
+def mlstm_forward(p, cfg, x, state=None):
+    """x: (B,S,D) -> (y, state). Matrix memory per head: C (B,H,hd,hd)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    d_in = p["wq"].shape[0]
+    hd = d_in // H
+    up = x @ p["w_up"]
+    u, z = jnp.split(up, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    uc, new_conv = causal_conv1d(u, p["conv_w"], conv_state)
+    uc = jax.nn.silu(uc)
+    # q/k/v stay in the compute dtype; the scan upcasts per step, so the
+    # saved per-chunk inputs are bf16 instead of f32 (halves xs stacks)
+    q = (uc @ p["wq"]).reshape(B, S, H, hd)
+    k = (uc @ p["wk"]).reshape(B, S, H, hd) * hd ** -0.5
+    v = (uc @ p["wv"]).reshape(B, S, H, hd)
+    gates = (uc @ p["w_if"] + p["b_if"]).astype(jnp.float32)  # (B,S,2H)
+    log_i, log_f = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_t, k_t, v_t, li, lf = inp
+        q_t, k_t, v_t = (a.astype(jnp.float32) for a in (q_t, k_t, v_t))
+        m_new = jnp.maximum(lf + m, li)                  # (B,H)
+        f_ = jnp.exp(lf + m - m_new)[..., None, None]
+        i_ = jnp.exp(li - m_new)[..., None, None]
+        C = f_ * C + i_ * (v_t[..., :, None] * k_t[..., None, :])
+        n = f_[..., 0] * n + i_[..., 0] * k_t
+        num = jnp.einsum("bhvk,bhk->bhv", C, q_t)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t)),
+                          jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), num / den
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (q, k, v)) + \
+        (log_i.transpose(1, 0, 2), log_f.transpose(1, 0, 2))
+    (C, n, m), hs = time_scan(step, (C0, n0, m0), xs,
+                              chunk=cfg.recurrent_chunk)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d_in).astype(x.dtype)
+    h = (h @ p["w_o"]) * jax.nn.silu(z)
+    y = h @ p["w_down"]
+    return y, {"C": C, "n": n, "m": m, "conv": new_conv}
+
+
+def init_mlstm_state(cfg, batch, dtype):
+    x = cfg.xlstm
+    d_in = int(cfg.d_model * x.proj_factor)
+    hd = d_in // cfg.n_heads
+    return {"C": jnp.zeros((batch, cfg.n_heads, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, cfg.n_heads, hd), jnp.float32),
+            "m": jnp.full((batch, cfg.n_heads), -1e30, jnp.float32),
+            "conv": jnp.zeros((batch, x.conv_dim - 1, d_in), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory) — xLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "w_x": dense_init(ks[0], (d, 4 * d), dtype),
+        "r_h": dense_init(ks[1], (d, 4 * d), dtype, scale=d ** -0.5 * 0.5),
+        "b": jnp.zeros((4 * d,), dtype),
+        "w_out": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def slstm_forward(p, cfg, x, state=None):
+    """x: (B,S,D) -> (y, state). Exponential gating with stabilizer."""
+    B, S, D = x.shape
+    if state is None:
+        h0 = jnp.zeros((B, D), jnp.float32)
+        c0 = jnp.zeros((B, D), jnp.float32)
+        n0 = jnp.ones((B, D), jnp.float32)
+        m0 = jnp.zeros((B, D), jnp.float32)
+    else:
+        h0, c0, n0, m0 = (state["h"], state["c"], state["n"], state["m"])
+    xw = (x @ p["w_x"] + p["b"]).astype(jnp.float32)
+
+    def step(carry, xw_t):
+        h, c, n, m = carry
+        pre = xw_t + (h.astype(x.dtype) @ p["r_h"]).astype(jnp.float32)
+        zi, zf, zz, zo = jnp.split(pre, 4, axis=-1)
+        log_f = jax.nn.log_sigmoid(zf)
+        m_new = jnp.maximum(log_f + m, zi)
+        i_ = jnp.exp(zi - m_new)
+        f_ = jnp.exp(log_f + m - m_new)
+        c = f_ * c + i_ * jnp.tanh(zz)
+        n = f_ * n + i_
+        h = jax.nn.sigmoid(zo) * c / jnp.maximum(n, 1.0)
+        return (h, c, n, m_new), h
+
+    (h, c, n, m), hs = time_scan(step, (h0, c0, n0, m0),
+                                 xw.transpose(1, 0, 2),
+                                 chunk=cfg.recurrent_chunk)
+    y = hs.transpose(1, 0, 2).astype(x.dtype) @ p["w_out"]
+    return y, {"h": h, "c": c, "n": n, "m": m}
+
+
+def init_slstm_state(cfg, batch, dtype):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": jnp.ones((batch, d), jnp.float32), "m": z}

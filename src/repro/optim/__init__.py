@@ -1,0 +1,2 @@
+from repro.optim.optimizers import (adam, cosine_schedule, get_optimizer,
+                                    sgd)

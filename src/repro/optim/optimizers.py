@@ -1,0 +1,86 @@
+"""Optimizers (pure-pytree, optax-free): SGD+momentum, Adam, schedules.
+
+``update(grads, state, params)`` returns (new_params, new_state) with
+gradient-ASCENT semantics (policy gradient maximizes J); pass
+``maximize=False`` for descent (supervised losses).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: object
+    v: object
+
+
+class MomentumState(NamedTuple):
+    m: object
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable      # (grads, state, params) -> (params, state)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         maximize: bool = True) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = jax.tree.map(jnp.zeros_like, params)
+        return AdamState(jnp.zeros((), jnp.int32), z,
+                         jax.tree.map(jnp.zeros_like, params))
+
+    def update(g, s, params):
+        step = s.step + 1
+        m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, s.m, g)
+        v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, s.v, g)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        sign = 1.0 if maximize else -1.0
+        upd = jax.tree.map(
+            lambda mm, vv: sign * lr_fn(step) * (mm / bc1)
+            / (jnp.sqrt(vv / bc2) + eps), m, v)
+        params = jax.tree.map(jnp.add, params, upd)
+        return params, AdamState(step, m, v)
+
+    return Optimizer(init, update)
+
+
+def sgd(lr, momentum: float = 0.0, maximize: bool = True) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return MomentumState(jax.tree.map(jnp.zeros_like, params))
+
+    def update(g, s, params):
+        m = jax.tree.map(lambda a, b: momentum * a + b, s.m, g)
+        sign = 1.0 if maximize else -1.0
+        params = jax.tree.map(lambda p, mm: p + sign * lr_fn(0) * mm,
+                              params, m)
+        return params, MomentumState(m)
+
+    return Optimizer(init, update)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.float32(step)
+        warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def get_optimizer(name: str, lr, **kw) -> Optimizer:
+    return {"adam": adam, "sgd": sgd}[name](lr, **kw)

@@ -1,0 +1,5 @@
+from repro.rl.envs import Env, make_cartpole, make_env, make_lunarlander
+from repro.rl.gradient import (grad_estimate, importance_weights,
+                               step_log_probs, weighted_grad_estimate)
+from repro.rl.policy import init_mlp, mlp_logits
+from repro.rl.rollout import Trajectory, batch_return, sample_batch

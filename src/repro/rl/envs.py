@@ -1,0 +1,109 @@
+"""Pure-JAX episodic environments (fixed horizon, absorbing termination).
+
+CartPole follows the classic Barto-Sutton-Anderson dynamics [31]. The paper's
+second benchmark is Box2D LunarLander; we implement `LunarLanderLite`, a
+faithful-in-spirit 2D thrust/gravity lander with leg contacts, shaping
+rewards, crash/landing terminals — pure JAX so rollouts jit/vmap (noted in
+DESIGN.md as an adaptation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Env:
+    name: str
+    obs_dim: int
+    n_actions: int
+    horizon: int
+    reset: Callable          # key -> state
+    step: Callable           # (state, action) -> (state, reward, done)
+    observe: Callable        # state -> obs
+
+
+# ---------------------------------------------------------------------------
+# CartPole
+# ---------------------------------------------------------------------------
+
+def make_cartpole(horizon: int = 200) -> Env:
+    g, mc, mp, lp, f, dt = 9.8, 1.0, 0.1, 0.5, 10.0, 0.02
+    mt = mc + mp
+    pml = mp * lp
+
+    def reset(key):
+        return jax.random.uniform(key, (4,), minval=-0.05, maxval=0.05)
+
+    def step(s, a):
+        x, xd, th, thd = s
+        force = jnp.where(a == 1, f, -f)
+        ct, st = jnp.cos(th), jnp.sin(th)
+        tmp = (force + pml * thd ** 2 * st) / mt
+        thdd = (g * st - ct * tmp) / (lp * (4.0 / 3.0 - mp * ct ** 2 / mt))
+        xdd = tmp - pml * thdd * ct / mt
+        s2 = jnp.stack([x + dt * xd, xd + dt * xdd,
+                        th + dt * thd, thd + dt * thdd])
+        done = (jnp.abs(s2[0]) > 2.4) | (jnp.abs(s2[2]) > 12 * jnp.pi / 180)
+        return s2, 1.0, done
+
+    return Env("cartpole", 4, 2, horizon, reset, step, lambda s: s)
+
+
+# ---------------------------------------------------------------------------
+# LunarLander-lite
+# ---------------------------------------------------------------------------
+
+def make_lunarlander(horizon: int = 300) -> Env:
+    g, dt = -1.6, 0.05
+    main_t, side_t = 6.0, 0.6
+
+    def reset(key):
+        k1, k2 = jax.random.split(key)
+        x0 = jax.random.uniform(k1, (), minval=-0.3, maxval=0.3)
+        vx0 = jax.random.uniform(k2, (), minval=-0.3, maxval=0.3)
+        # state: x, y, vx, vy, theta, omega
+        return jnp.array([x0, 1.4, vx0, 0.0, 0.0, 0.0])
+
+    def potential(s):
+        x, y, vx, vy, th, om = s
+        return (-10.0 * jnp.sqrt(x ** 2 + y ** 2)
+                - 10.0 * jnp.sqrt(vx ** 2 + vy ** 2)
+                - 10.0 * jnp.abs(th))
+
+    def step(s, a):
+        x, y, vx, vy, th, om = s
+        main = (a == 2).astype(jnp.float32)
+        left = (a == 1).astype(jnp.float32)
+        right = (a == 3).astype(jnp.float32)
+        fx = main * main_t * (-jnp.sin(th))
+        fy = main * main_t * jnp.cos(th) + g
+        torque = (left - right) * side_t
+        vx2, vy2 = vx + dt * fx, vy + dt * fy
+        x2, y2 = x + dt * vx2, y + dt * vy2
+        om2 = om + dt * torque
+        th2 = th + dt * om2
+        s2 = jnp.array([x2, y2, vx2, vy2, th2, om2])
+        landed_zone = (jnp.abs(x2) < 0.25) & (jnp.abs(vx2) < 0.6) & \
+            (jnp.abs(vy2) < 0.6) & (jnp.abs(th2) < 0.3)
+        touch = y2 <= 0.0
+        out = jnp.abs(x2) > 1.5
+        done = touch | out
+        shaped = potential(s2) - potential(s)
+        fuel = -0.3 * main - 0.03 * (left + right)
+        terminal = jnp.where(touch & landed_zone, 100.0,
+                             jnp.where(touch | out, -100.0, 0.0))
+        r = shaped + fuel + terminal
+        return s2, r, done
+
+    return Env("lunarlander", 6, 4, horizon, reset, step, lambda s: s)
+
+
+_REGISTRY = {"cartpole": make_cartpole, "lunarlander": make_lunarlander}
+
+
+def make_env(name: str, **kw) -> Env:
+    return _REGISTRY[name](**kw)

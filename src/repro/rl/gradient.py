@@ -1,0 +1,81 @@
+"""Policy-gradient estimators: REINFORCE and GPOMDP (paper App. A.1),
+with the importance-weighted estimator ``g^{ω_θt}(τ | θ_{t-1})`` used by the
+PAGE correction (Assumption 5 / SVRPG-style, weight not differentiated).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.policy import mlp_logits
+from repro.rl.rollout import Trajectory
+
+
+def step_log_probs(params, traj: Trajectory, activation="tanh"):
+    """(H,) log π_θ(a_h | s_h), masked."""
+    logits = mlp_logits(params, traj.obs, activation)       # (H, A)
+    lp = jax.nn.log_softmax(logits)
+    lp = jnp.take_along_axis(lp, traj.actions[..., None], axis=-1)[..., 0]
+    return lp * traj.mask
+
+
+def _gpomdp_surrogate(params, traj, gamma, baseline, activation):
+    """Σ_h (Σ_{t<=h} log π_t) (γ^h r_h − b_h)  — gradient = GPOMDP."""
+    lp = step_log_probs(params, traj, activation)
+    H = lp.shape[-1]
+    disc_r = traj.rewards * gamma ** jnp.arange(H) - baseline * traj.mask
+    cum_lp = jnp.cumsum(lp, axis=-1)
+    return jnp.sum(cum_lp * jax.lax.stop_gradient(disc_r), axis=-1)
+
+
+def _reinforce_surrogate(params, traj, gamma, baseline, activation):
+    lp = step_log_probs(params, traj, activation)
+    H = lp.shape[-1]
+    g_return = jnp.sum(traj.rewards * gamma ** jnp.arange(H), axis=-1)
+    return jnp.sum(lp, axis=-1) * jax.lax.stop_gradient(g_return - baseline)
+
+
+_SURROGATES = {"gpomdp": _gpomdp_surrogate, "reinforce": _reinforce_surrogate}
+
+
+def grad_estimate(params, traj: Trajectory, gamma: float,
+                  baseline: float = 0.0, estimator: str = "gpomdp",
+                  activation: str = "tanh"):
+    """(1/M) Σ_i g(τ_i | θ): mean PG over a (M, H, ...) trajectory batch."""
+    sur = _SURROGATES[estimator]
+
+    def loss(p):
+        s = jax.vmap(lambda t: sur(p, t, gamma, baseline, activation)
+                     )(traj)
+        return jnp.mean(s)
+
+    return jax.grad(loss)(params)
+
+
+def importance_weights(params_old, params_new, traj: Trajectory,
+                       activation="tanh", clip: float = 10.0):
+    """ω(τ | θ_new, θ_old) = p(τ|θ_old)/p(τ|θ_new), τ ~ p(·|θ_new).
+
+    Clipped for numerical stability (standard SVRPG practice).
+    """
+    lp_old = jax.vmap(lambda t: jnp.sum(step_log_probs(params_old, t,
+                                                       activation)))(traj)
+    lp_new = jax.vmap(lambda t: jnp.sum(step_log_probs(params_new, t,
+                                                       activation)))(traj)
+    w = jnp.exp(jnp.clip(lp_old - lp_new, -jnp.log(clip), jnp.log(clip)))
+    return jax.lax.stop_gradient(w)
+
+
+def weighted_grad_estimate(params_old, params_new, traj: Trajectory,
+                           gamma: float, baseline: float = 0.0,
+                           estimator: str = "gpomdp", activation="tanh"):
+    """(1/M) Σ_i g^{ω_θnew}(τ_i | θ_old): IS-corrected PG at θ_old from
+    trajectories sampled at θ_new."""
+    w = importance_weights(params_old, params_new, traj, activation)
+    sur = _SURROGATES[estimator]
+
+    def loss(p):
+        s = jax.vmap(lambda t: sur(p, t, gamma, baseline, activation))(traj)
+        return jnp.mean(w * s)
+
+    return jax.grad(loss)(params_old)

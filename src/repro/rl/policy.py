@@ -1,0 +1,35 @@
+"""Categorical MLP policies (paper Table 1: 16,16 ReLU for CartPole,
+64,64 Tanh for LunarLander)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mlp(key, sizes, dtype=jnp.float32):
+    """sizes: (obs_dim, h1, ..., n_actions)."""
+    params = []
+    for i, (din, dout) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k1, key = jax.random.split(key)
+        w = jax.random.normal(k1, (din, dout), dtype) * (din ** -0.5)
+        params.append({"w": w, "b": jnp.zeros((dout,), dtype)})
+    return params
+
+
+def mlp_logits(params, obs, activation="tanh"):
+    act = jnp.tanh if activation == "tanh" else jax.nn.relu
+    x = obs
+    for layer in params[:-1]:
+        x = act(x @ layer["w"] + layer["b"])
+    return x @ params[-1]["w"] + params[-1]["b"]
+
+
+def log_prob(params, obs, action, activation="tanh"):
+    logits = mlp_logits(params, obs, activation)
+    return jax.nn.log_softmax(logits)[..., action]
+
+
+def sample_action(params, obs, key, activation="tanh"):
+    logits = mlp_logits(params, obs, activation)
+    a = jax.random.categorical(key, logits)
+    return a, jax.nn.log_softmax(logits)[a]

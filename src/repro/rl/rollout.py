@@ -1,0 +1,52 @@
+"""Trajectory sampling with ``lax.scan`` (fixed horizon H, absorbing done)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.policy import mlp_logits
+
+
+class Trajectory(NamedTuple):
+    obs: jnp.ndarray        # (H, obs_dim)
+    actions: jnp.ndarray    # (H,) int32
+    rewards: jnp.ndarray    # (H,)
+    mask: jnp.ndarray       # (H,) 1.0 while episode alive
+
+
+def sample_trajectory(env, params, key, activation="tanh",
+                      logit_scale=1.0) -> Trajectory:
+    k_reset, k_steps = jax.random.split(key)
+    s0 = env.reset(k_reset)
+
+    def body(carry, k):
+        s, alive = carry
+        obs = env.observe(s)
+        logits = mlp_logits(params, obs, activation) * logit_scale
+        a = jax.random.categorical(k, logits)
+        s2, r, done = env.step(s, a)
+        # freeze the state once done; mask future rewards
+        s_next = jax.tree.map(lambda new, old: jnp.where(alive, new, old),
+                              s2, s)
+        out = (obs, a, r * alive, alive)
+        return (s_next, alive * (1.0 - done.astype(jnp.float32))), out
+
+    (_, _), (obs, actions, rewards, mask) = jax.lax.scan(
+        body, (s0, jnp.float32(1.0)), jax.random.split(k_steps, env.horizon))
+    return Trajectory(obs, actions, rewards, mask)
+
+
+def sample_batch(env, params, key, n: int, activation="tanh",
+                 logit_scale=1.0) -> Trajectory:
+    """(n, H, ...) batch of trajectories."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: sample_trajectory(env, params, k, activation,
+                                                logit_scale))(keys)
+
+
+def batch_return(traj: Trajectory, gamma: float = 1.0) -> jnp.ndarray:
+    H = traj.rewards.shape[-1]
+    disc = gamma ** jnp.arange(H)
+    return jnp.sum(traj.rewards * disc, axis=-1)

@@ -1,0 +1,79 @@
+"""Averaging agreement (paper Def. 3, Algorithm 3) tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attacks as attacks_lib
+from repro.core.agreement import avg_agree, gda_mean, honest_diameter, mda_mean
+
+
+def test_mda_picks_min_diameter_subset():
+    x = jnp.array([[0.0], [0.1], [0.2], [10.0]])
+    out = mda_mean(x, n_keep=3)
+    np.testing.assert_allclose(out, [0.1], atol=1e-6)
+
+
+def test_gda_mean_closest_to_own():
+    x = jnp.array([[0.0], [1.0], [2.0], [50.0]])
+    out = gda_mean(x, own=x[0], n_keep=3)
+    np.testing.assert_allclose(out, [1.0], atol=1e-6)
+
+
+@pytest.mark.parametrize("method", ["gda", "mda"])
+def test_contraction_honest(method):
+    """Def. 3 first property: honest diameter halves per round (>=2^k)."""
+    K, d = 8, 5
+    theta = jax.random.normal(jax.random.PRNGKey(0), (K, d))
+    hmask = jnp.ones((K,), bool)
+    d0 = float(honest_diameter(theta, hmask))
+    for kappa in (1, 3):
+        out = avg_agree(theta, kappa=kappa, n_byz=0, method=method)
+        dk = float(honest_diameter(out, hmask))
+        assert dk <= d0 / 2 ** kappa + 1e-5, (method, kappa, dk, d0)
+
+
+@pytest.mark.parametrize("method", ["gda", "mda"])
+def test_contraction_under_per_receiver_attack(method):
+    """Byzantines send inconsistent per-receiver garbage; honest agents
+    must still contract and stay near the honest hull."""
+    K, d, n_byz = 8, 4, 1
+    key = jax.random.PRNGKey(1)
+    theta = jax.random.normal(key, (K, d))
+    byz_mask = jnp.asarray(np.arange(K) < n_byz)
+    attack = attacks_lib.per_receiver(
+        attacks_lib.get_attack("large_noise", sigma=50.0), K)
+    hmask = ~byz_mask
+    d0 = float(honest_diameter(theta, hmask))
+    out = avg_agree(theta, kappa=4, n_byz=n_byz, byz_mask=byz_mask,
+                    method=method, attack=attack, key=key)
+    dk = float(honest_diameter(out, hmask))
+    assert dk <= d0 / 2 + 1e-4
+    # honest outputs remain within the (slightly inflated) honest range
+    lo = jnp.min(theta[n_byz:], axis=0) - 0.3 * d0
+    hi = jnp.max(theta[n_byz:], axis=0) + 0.3 * d0
+    assert bool(jnp.all((out[n_byz:] >= lo) & (out[n_byz:] <= hi)))
+
+
+def test_mean_preservation_honest_case():
+    """Def. 3 second property with alpha=0: agreed mean stays close to the
+    input mean."""
+    K, d = 8, 6
+    theta = jax.random.normal(jax.random.PRNGKey(2), (K, d))
+    out = avg_agree(theta, kappa=6, n_byz=0, method="gda")
+    drift = jnp.linalg.norm(jnp.mean(out, 0) - jnp.mean(theta, 0))
+    diam0 = float(honest_diameter(theta, jnp.ones((K,), bool)))
+    assert float(drift) <= diam0  # C_avg = O(1)
+
+
+def test_avg_zero_attack_defeated_by_agreement():
+    K, n_byz = 9, 2
+    theta = 0.1 * jax.random.normal(jax.random.PRNGKey(3), (K, 3)) + 5.0
+    byz_mask = jnp.asarray(np.arange(K) < n_byz)
+    attack = attacks_lib.get_attack("avg_zero")
+    # alpha_bar must satisfy n_byz/K < alpha_bar for the guarantee to hold
+    out = avg_agree(theta, kappa=4, n_byz=n_byz, byz_mask=byz_mask,
+                    method="gda", attack=attack, key=jax.random.PRNGKey(4),
+                    alpha_bar=0.25)
+    # honest agents stay near 5.0, not dragged to 0
+    assert float(jnp.min(out[n_byz:])) > 4.0

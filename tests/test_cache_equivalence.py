@@ -1,0 +1,92 @@
+"""Prefill→decode equals full forward, for every cache type: GQA KV ring,
+MLA latent, recurrent SSM/xLSTM states, sliding-window rings, MLA
+absorbed-vs-naive decode."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.models.attention import mla_decode
+from repro.models.model import decode_step, forward, init_params, prefill
+
+KEY = jax.random.PRNGKey(1)
+
+ARCHS = ["llama3_2_1b", "qwen2_7b", "minicpm3_4b", "hymba_1_5b",
+         "xlstm_350m", "musicgen_medium"]
+
+
+def _no_drop(cfg):
+    if cfg.moe is not None:
+        return dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", ARCHS + ["grok_1_314b",
+                                          "deepseek_v2_lite_16b"])
+def test_prefill_decode_matches_forward(arch):
+    cfg = _no_drop(reduced(get_config(arch)))
+    p = init_params(cfg, KEY)
+    B, S, n_dec = 2, 12, 4
+    toks = jax.random.randint(KEY, (B, S + n_dec), 0, cfg.vocab_size)
+    full, _, _ = forward(cfg, p, toks)
+    logits, cache = prefill(cfg, p, toks[:, :S], cache_len=S + n_dec)
+    errs = [float(jnp.max(jnp.abs(logits[:, -1] - full[:, S - 1])))]
+    for i in range(n_dec):
+        lg, cache = decode_step(cfg, p, toks[:, S + i], cache)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, S + i]))))
+    assert max(errs) < 1e-3, (arch, errs)
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_1b", "minicpm3_4b",
+                                  "hymba_1_5b"])
+def test_sliding_window_ring_cache(arch):
+    """A ring cache of size W must equal a window-W masked full forward —
+    this is the long_500k serving mode."""
+    cfg = reduced(get_config(arch))
+    p = init_params(cfg, KEY)
+    B, S, n_dec, W = 2, 12, 6, 8
+    toks = jax.random.randint(KEY, (B, S + n_dec), 0, cfg.vocab_size)
+    fullw, _, _ = forward(cfg, p, toks, window=W)
+    lg, cache = prefill(cfg, p, toks[:, :S], cache_len=W, window=W)
+    errs = [float(jnp.max(jnp.abs(lg[:, -1] - fullw[:, S - 1])))]
+    for i in range(n_dec):
+        lgd, cache = decode_step(cfg, p, toks[:, S + i], cache)
+        errs.append(float(jnp.max(jnp.abs(lgd[:, 0] - fullw[:, S + i]))))
+    assert max(errs) < 1e-3, (arch, errs)
+
+
+def test_mla_absorbed_equals_naive_decode():
+    """DeepSeek weight-absorption identity (§Perf optimization)."""
+    from repro.models.attention import init_mla
+    cfg = reduced(get_config("minicpm3_4b"))
+    p = init_mla(KEY, cfg, jnp.float32)
+    B, W = 2, 8
+    x = jax.random.normal(KEY, (B, 1, cfg.d_model))
+    cache = {"c": jax.random.normal(KEY, (B, W, cfg.mla.kv_lora_rank)),
+             "k_rope": jax.random.normal(
+                 KEY, (B, W, cfg.mla.qk_rope_head_dim))}
+    pos = jnp.asarray(5, jnp.int32)
+    slots = jnp.arange(W).at[pos % W].set(pos)
+    o1, c1 = mla_decode(p, cfg, x, pos, cache, slots, absorb=True)
+    o2, c2 = mla_decode(p, cfg, x, pos, cache, slots, absorb=False)
+    np.testing.assert_allclose(o1, o2, atol=1e-4)
+    for a, b in zip(jax.tree.leaves(c1), jax.tree.leaves(c2)):
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_prefill_longer_than_ring():
+    """Prompt longer than the ring: cache must keep exactly the last W."""
+    cfg = reduced(get_config("llama3_2_1b"))
+    p = init_params(cfg, KEY)
+    B, S, W, n_dec = 1, 20, 8, 3
+    toks = jax.random.randint(KEY, (B, S + n_dec), 0, cfg.vocab_size)
+    fullw, _, _ = forward(cfg, p, toks, window=W)
+    lg, cache = prefill(cfg, p, toks[:, :S], cache_len=W, window=W)
+    assert float(jnp.max(jnp.abs(lg[:, -1] - fullw[:, S - 1]))) < 1e-3
+    for i in range(n_dec):
+        lgd, cache = decode_step(cfg, p, toks[:, S + i], cache)
+        assert float(jnp.max(jnp.abs(lgd[:, 0] - fullw[:, S + i]))) < 1e-3

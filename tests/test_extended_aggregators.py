@@ -1,0 +1,47 @@
+"""Centered clipping [29] + resilient momentum [23] aggregators."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregators import (centered_clip, get_aggregator, rfa,
+                                    resilient_momentum_update)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_centered_clip_resists_outliers():
+    x = 0.1 * jax.random.normal(KEY, (13, 16))
+    x = x.at[:3].set(50.0)
+    hm = jnp.mean(x[3:], axis=0)
+    out = centered_clip(x, tau=0.5, n_iter=20)
+    assert float(jnp.linalg.norm(out - hm)) < 1.0
+
+
+def test_centered_clip_no_byz_is_mean_like():
+    x = 0.05 * jax.random.normal(KEY, (8, 12))
+    out = centered_clip(x, tau=10.0, n_iter=5)
+    np.testing.assert_allclose(out, jnp.mean(x, 0), atol=1e-4)
+
+
+def test_centered_clip_factory():
+    f = get_aggregator("centered_clip", K=8, n_byz=1)
+    out = f(0.1 * jax.random.normal(KEY, (8, 4)), KEY)
+    assert out.shape == (4,)
+
+
+def test_resilient_momentum_shrinks_variance():
+    """Var of aggregated momenta << var of aggregated raw gradients."""
+    K, d, beta = 10, 8, 0.9
+    m = jnp.zeros((K, d))
+    agg = lambda x, key=None: rfa(x)
+    outs_mom, outs_raw = [], []
+    key = KEY
+    for _ in range(50):
+        key, k = jax.random.split(key)
+        g = 1.0 + jax.random.normal(k, (K, d))   # true grad = 1
+        m, v = resilient_momentum_update(agg, m, beta, g)
+        outs_mom.append(v)
+        outs_raw.append(agg(g))
+    var_mom = float(jnp.var(jnp.stack(outs_mom[20:])))
+    var_raw = float(jnp.var(jnp.stack(outs_raw[20:])))
+    assert var_mom < 0.35 * var_raw

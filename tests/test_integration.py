@@ -1,0 +1,121 @@
+"""Integration tests: ByzPG / DecByzPG on CartPole, federated LLM training
+resilience, stacked vs flat aggregation equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core.byzpg import ByzPGConfig, run_byzpg
+from repro.core.decbyzpg import DecByzPGConfig, run_decbyzpg
+from repro.distributed.fed_trainer import (FedConfig, fed_train_step,
+                                           init_fed_state)
+from repro.rl.envs import make_cartpole
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.slow
+def test_byzpg_learns_cartpole():
+    env = make_cartpole(horizon=100)
+    out = run_byzpg(env, ByzPGConfig(K=5, N=20, B=4, eta=5e-3, seed=1),
+                    T=25)
+    assert np.mean(out["returns"][-5:]) > np.mean(out["returns"][:3]) + 8
+
+
+@pytest.mark.slow
+def test_byzpg_robust_vs_mean_under_large_noise():
+    env = make_cartpole(horizon=80)
+    kw = dict(K=7, n_byz=2, attack="large_noise", N=15, B=3, eta=5e-3,
+              seed=2)
+    robust = run_byzpg(env, ByzPGConfig(aggregator="rfa", **kw), T=18)
+    naive = run_byzpg(env, ByzPGConfig(aggregator="mean", **kw), T=18)
+    assert np.mean(robust["returns"][-5:]) > np.mean(naive["returns"][-5:])
+
+
+@pytest.mark.slow
+def test_decbyzpg_agreement_keeps_agents_synced():
+    env = make_cartpole(horizon=60)
+    # bucketed RFA uses per-agent randomness, so without agreement the
+    # agents' parameters drift apart; Avg-Agree_4 keeps them synced.
+    out = run_decbyzpg(env, DecByzPGConfig(
+        K=5, n_byz=1, attack="large_noise", aggregator="rfa", kappa=4,
+        N=10, B=2, eta=5e-3, seed=3), T=10)
+    assert max(out["diameter"][2:]) < 1.0
+    out_nok = run_decbyzpg(env, DecByzPGConfig(
+        K=5, n_byz=1, attack="large_noise", aggregator="rfa", kappa=0,
+        N=10, B=2, eta=5e-3, seed=3), T=10)
+    assert max(out["diameter"]) < 0.1 * max(out_nok["diameter"])
+
+
+def test_fed_llm_robust_agg_resists_avg_zero():
+    """Honest-loss under avg_zero: robust aggregation keeps improving,
+    naive mean stalls (gradient sum driven to zero)."""
+    cfg = reduced(get_config("llama3_2_1b"))
+    K = 4
+    batch = {"tokens": jax.random.randint(KEY, (K, 2, 16), 0,
+                                          cfg.vocab_size),
+             "labels": jax.random.randint(KEY, (K, 2, 16), 0,
+                                          cfg.vocab_size)}
+    mask = jnp.array([True, False, False, False])
+
+    def run(agg):
+        fed = FedConfig(aggregator=agg, kappa=2, n_byz=1,
+                        attack="avg_zero", lr=2e-3)
+        state = init_fed_state(cfg, fed, K, KEY)
+        losses = []
+        for i in range(8):
+            state, m = fed_train_step(cfg, fed, state, batch, mask,
+                                      jax.random.PRNGKey(i), large=True)
+            losses.append(float(m["loss"]))
+        return losses
+
+    robust = run("rfa")
+    naive = run("mean")
+    assert robust[-1] < robust[0] - 0.05          # robust improves
+    assert (robust[0] - robust[-1]) > 2.0 * (naive[0] - naive[-1])
+
+
+def test_fed_page_small_step_runs_and_improves():
+    cfg = reduced(get_config("qwen2_5_3b"))
+    K = 2
+    fed = FedConfig(aggregator="mean", kappa=0, lr=2e-3)
+    state = init_fed_state(cfg, fed, K, KEY)
+    batch = {"tokens": jax.random.randint(KEY, (K, 2, 16), 0,
+                                          cfg.vocab_size),
+             "labels": jax.random.randint(KEY, (K, 2, 16), 0,
+                                          cfg.vocab_size)}
+    mask = jnp.zeros((K,), bool)
+    losses = []
+    for i, large in enumerate([True, False, False, False, False, False]):
+        state, m = fed_train_step(cfg, fed, state, batch, mask,
+                                  jax.random.PRNGKey(i), large=large)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(losses))
+
+
+def test_stacked_aggregators_match_core_on_matrices():
+    """distributed.agg (stacked trees) == core.agg (flat (K,d)) for rfa,
+    trimmed_mean, krum on equivalent inputs."""
+    from repro.core import aggregators as core_agg
+    from repro.distributed import aggregation as dist_agg
+    K, d = 9, 30
+    x = jax.random.normal(KEY, (K, d))
+    x = x.at[:2].set(20.0)
+    tree = {"a": x[:, :13], "b": x[:, 13:].reshape(K, 17)}
+
+    got = dist_agg.agg_trimmed_mean(tree, n_byz=2)
+    flat = jnp.concatenate([got["a"][0], got["b"][0]])
+    want = core_agg.trimmed_mean(x, n_byz=2)
+    np.testing.assert_allclose(flat, want, atol=1e-5)
+
+    got = dist_agg.agg_krum(tree, n_byz=2)
+    flat = jnp.concatenate([got["a"][0], got["b"][0]])
+    want = core_agg.krum(x, n_byz=2)
+    np.testing.assert_allclose(flat, want, atol=1e-5)
+
+    got = dist_agg.agg_rfa(tree, n_iter=32)
+    flat = jnp.concatenate([got["a"][0], got["b"][0]])
+    want = core_agg.rfa(x, n_iter=32)
+    np.testing.assert_allclose(flat, want, atol=1e-2, rtol=1e-2)

@@ -1,0 +1,105 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps vs the ref.py
+pure-jnp oracles (deliverable (c))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_pallas)
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.pairwise_dist import ref as pd_ref
+from repro.kernels.pairwise_dist.pairwise_dist import pairwise_sq_dists_pallas
+from repro.kernels.trimmed_mean import ref as tm_ref
+from repro.kernels.trimmed_mean.trimmed_mean import trimmed_mean_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("K,d", [(3, 17), (8, 512), (13, 1000), (16, 4096),
+                                 (32, 2050)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_dist_sweep(K, d, dtype):
+    x = jax.random.normal(KEY, (K, d), dtype)
+    got = pairwise_sq_dists_pallas(x, interpret=True)
+    want = pd_ref.pairwise_sq_dists(x)
+    tol = 1e-3 * d if dtype == jnp.bfloat16 else 1e-2
+    np.testing.assert_allclose(got, want, atol=tol, rtol=1e-2)
+    # metric properties
+    assert np.all(np.diag(np.asarray(got)) < tol + 1e-3)
+    np.testing.assert_allclose(got, got.T, atol=tol)
+
+
+@pytest.mark.parametrize("K,d,n", [(5, 33, 1), (8, 600, 2), (13, 1024, 3),
+                                   (16, 100, 5)])
+def test_trimmed_mean_sweep(K, d, n):
+    x = jax.random.normal(KEY, (K, d))
+    got = trimmed_mean_pallas(x, n, interpret=True)
+    want = tm_ref.trimmed_mean(x, n)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_trimmed_mean_with_ties():
+    x = jnp.ones((6, 50)).at[0].set(5.0)
+    got = trimmed_mean_pallas(x, 1, interpret=True)
+    want = tm_ref.trimmed_mean(x, 1)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,H,Hkv,Sq,Sk,hd", [
+    (1, 2, 1, 64, 64, 16),
+    (2, 4, 2, 96, 96, 32),
+    (1, 8, 8, 128, 128, 64),
+    (2, 4, 1, 100, 100, 24),        # ragged seq + GQA 4:1
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, Hkv, Sq, Sk, hd, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B * H, Sq, hd), dtype)
+    k = jax.random.normal(ks[1], (B * Hkv, Sk, hd), dtype)
+    v = jax.random.normal(ks[2], (B * Hkv, Sk, hd), dtype)
+    got = flash_attention_pallas(q, k, v, n_q_heads=H, block_q=32,
+                                 block_k=32, interpret=True)
+    want = fa_ref.attention(q, k, v, n_q_heads=H)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("window", [1, 7, 32, 1000])
+def test_flash_attention_sliding_window(window):
+    B, H, S, hd = 1, 2, 80, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B * H, S, hd))
+    k = jax.random.normal(ks[1], (B * H, S, hd))
+    v = jax.random.normal(ks[2], (B * H, S, hd))
+    got = flash_attention_pallas(q, k, v, n_q_heads=H, window=window,
+                                 block_q=16, block_k=16, interpret=True)
+    want = fa_ref.attention(q, k, v, n_q_heads=H, window=window)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+def test_flash_attention_model_layout_wrapper():
+    B, S, H, Hkv, hd = 2, 64, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    got = flash_attention(q, k, v, use_pallas=True, block_q=32, block_k=32)
+    want = flash_attention(q, k, v, use_pallas=False)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+def test_flash_matches_model_chunked_attention():
+    """The Pallas kernel agrees with the model's chunked-scan attention."""
+    from repro.models.attention import chunked_causal_attention
+    B, S, H, Hkv, hd = 1, 96, 4, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    pos = jnp.arange(S)
+    want = chunked_causal_attention(q, k, v, pos, pos, chunk=32)
+    got = flash_attention(q, k, v, use_pallas=True, block_q=32, block_k=32)
+    np.testing.assert_allclose(got, want, atol=2e-5)

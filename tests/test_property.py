@@ -1,0 +1,104 @@
+"""Hypothesis property-based tests on system invariants (deliverable (c))."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregators as agg
+from repro.distributed.aggregation import (gda_mix_matrix, stacked_mix,
+                                           stacked_sq_dists)
+from repro.kernels.pairwise_dist import ref as pd_ref
+from repro.kernels.trimmed_mean import ref as tm_ref
+
+SETTINGS = hypothesis.settings(max_examples=25, deadline=None)
+
+
+def mats(min_k=3, max_k=12, max_d=24):
+    return hnp.arrays(
+        np.float32,
+        st.tuples(st.integers(min_k, max_k), st.integers(1, max_d)),
+        elements=st.floats(-100, 100, width=32))
+
+
+@SETTINGS
+@hypothesis.given(mats())
+def test_pairwise_dists_metric_properties(x):
+    d2 = np.asarray(pd_ref.pairwise_sq_dists(jnp.asarray(x)))
+    assert np.all(d2 >= 0)
+    scale = max(np.max(np.abs(x)) ** 2, 1.0)
+    np.testing.assert_allclose(d2, d2.T, atol=1e-2 * scale)
+    np.testing.assert_allclose(np.diag(d2), 0.0, atol=1e-2 * scale)
+
+
+@SETTINGS
+@hypothesis.given(mats(min_k=4), st.integers(0, 1))
+def test_trimmed_mean_bounds(x, n):
+    """Trimmed mean lies within [min, max] per coordinate and is
+    permutation-invariant."""
+    out = np.asarray(tm_ref.trimmed_mean(jnp.asarray(x), n))
+    assert np.all(out >= x.min(0) - 1e-4) and np.all(out <= x.max(0) + 1e-4)
+    perm = np.random.default_rng(0).permutation(x.shape[0])
+    out_p = np.asarray(tm_ref.trimmed_mean(jnp.asarray(x[perm]), n))
+    np.testing.assert_allclose(out, out_p, atol=1e-3)
+
+
+@SETTINGS
+@hypothesis.given(mats(min_k=5))
+def test_rfa_translation_equivariance(x):
+    shift = 7.5
+    a = np.asarray(agg.rfa(jnp.asarray(x)))
+    b = np.asarray(agg.rfa(jnp.asarray(x + shift)))
+    scale = max(np.max(np.abs(x)), 1.0)
+    np.testing.assert_allclose(b, a + shift, atol=2e-2 * scale)
+
+
+@SETTINGS
+@hypothesis.given(mats(min_k=5), st.integers(1, 2))
+def test_krum_output_is_an_input_row(x, n_byz):
+    hypothesis.assume(x.shape[0] > n_byz + 2)
+    out = np.asarray(agg.krum(jnp.asarray(x), n_byz=n_byz))
+    assert any(np.allclose(out, row) for row in x)
+
+
+@SETTINGS
+@hypothesis.given(st.integers(2, 12), st.integers(1, 12))
+def test_gda_mix_matrix_row_stochastic(K, n_keep):
+    n_keep = min(n_keep, K)
+    x = jax.random.normal(jax.random.PRNGKey(K), (K, 4))
+    d2 = pd_ref.pairwise_sq_dists(x)
+    W = np.asarray(gda_mix_matrix(d2, n_keep))
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-5)
+    assert np.all(W >= 0)
+    # self always selected (d2[k,k]=0 is the minimum)
+    assert np.all(np.diag(W) > 0)
+
+
+@SETTINGS
+@hypothesis.given(mats(min_k=3, max_k=8, max_d=12))
+def test_stacked_dists_match_flat(x):
+    """Tree-decomposed distances == flat-vector distances."""
+    K, d = x.shape
+    cut = d // 2
+    tree = {"a": jnp.asarray(x[:, :cut]), "b": jnp.asarray(x[:, cut:])}
+    got = np.asarray(stacked_sq_dists(tree))
+    want = np.asarray(pd_ref.pairwise_sq_dists(jnp.asarray(x)))
+    scale = max(np.max(np.abs(x)) ** 2, 1.0)
+    np.testing.assert_allclose(got, want, atol=1e-3 * scale, rtol=1e-3)
+
+
+@SETTINGS
+@hypothesis.given(mats(min_k=3, max_k=8, max_d=10))
+def test_mixing_contracts_diameter(x):
+    """One uniform-mix round leaves vectors in the convex hull: diameter is
+    non-increasing (the Avg-Agree core invariant)."""
+    K, d = x.shape
+    tree = {"a": jnp.asarray(x)}
+    W = jnp.full((K, K), 1.0 / K)
+    out = np.asarray(stacked_mix(W, tree)["a"])
+    def diam(m):
+        dd = pd_ref.pairwise_sq_dists(jnp.asarray(m))
+        return float(np.sqrt(np.max(np.asarray(dd))))
+    assert diam(out) <= diam(x) + 1e-2 * max(np.max(np.abs(x)), 1.0)

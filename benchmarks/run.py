@@ -35,19 +35,43 @@ def _row(name, us, derived=""):
 # Figure 1/4: speed-up with federation size K (DecByzPG, alpha = 0)
 # ---------------------------------------------------------------------------
 
+SEEDS = (0, 1, 2)
+T_FIG = 15
+
+
+def _grid_rows(env, grid, T, algo, name_fn, **kw):
+    """Run a ScenarioGrid through the fused engine and emit one CSV row per
+    scenario; us_per_call is wall time per scan iteration for the whole
+    vmapped seed batch (compile cached across calls, warmed first)."""
+    from repro.core.engine import ScenarioGrid, run_grid
+    for axes in grid.scenarios():
+        sub = ScenarioGrid(seeds=grid.seeds,
+                           **{f: (v,) for f, v in zip(
+                               ("K", "n_byz", "attack", "aggregator",
+                                "agreement"), axes)})
+        run_grid(env, sub, T, algo=algo, **kw)      # warm the loop cache
+        t0 = time.perf_counter()
+        res = run_grid(env, sub, T, algo=algo, **kw)
+        us = (time.perf_counter() - t0) * 1e6 / T
+        (scn, out), = res.items()
+        _row(name_fn(scn), us,
+             f"seeds={len(grid.seeds)};"
+             f"final_return={out['final_return_mean']:.1f}"
+             f"±{out['final_return_ci95']:.1f};"
+             f"samples_per_agent={int(out['samples'][:, -1].mean())}")
+
+
 def fig1_speedup():
-    from repro.core.decbyzpg import DecByzPGConfig, run_decbyzpg
+    import dataclasses as dc
+
+    from repro.core.engine import ScenarioGrid
     from repro.rl.envs import make_cartpole
     env = make_cartpole(horizon=100)
-    for K in (1, 5, 13):
-        cfg = DecByzPGConfig(K=K, N=20, B=4, kappa=4 if K > 1 else 0,
-                             eta=2e-2, seed=0)
-        t0 = time.perf_counter()
-        out = run_decbyzpg(env, cfg, T=15)
-        us = (time.perf_counter() - t0) * 1e6 / 15
-        _row(f"fig1_decbyzpg_K{K}", us,
-             f"final_return={np.mean(out['returns'][-3:]):.1f};"
-             f"samples_per_agent={out['samples'][-1]}")
+    grid = ScenarioGrid(seeds=SEEDS, K=(1, 5, 13))
+    _grid_rows(env, grid, T_FIG, "decbyzpg",
+               lambda s: f"fig1_decbyzpg_K{s.K}",
+               N=20, B=4, eta=2e-2,
+               override=lambda c: dc.replace(c, kappa=4 if c.K > 1 else 0))
 
 
 # ---------------------------------------------------------------------------
@@ -55,22 +79,23 @@ def fig1_speedup():
 # ---------------------------------------------------------------------------
 
 def fig2_attacks():
-    from repro.core.decbyzpg import DecByzPGConfig, run_decbyzpg
+    import dataclasses as dc
+
+    from repro.core.engine import ScenarioGrid
     from repro.rl.envs import make_cartpole
     env = make_cartpole(horizon=100)
-    for attack in ("random_action", "large_noise", "avg_zero"):
-        for name, agg, kappa in (("decbyzpg", "rfa", 4),
-                                 ("dec_page_pg", "mean", 0)):
-            # paper-exact: 3 of 13 agents Byzantine (the largest count
-            # tolerated by Assumption 1)
-            cfg = DecByzPGConfig(K=13, n_byz=3, attack=attack,
-                                 aggregator=agg, kappa=kappa,
-                                 N=20, B=4, eta=2e-2, seed=0)
-            t0 = time.perf_counter()
-            out = run_decbyzpg(env, cfg, T=15)
-            us = (time.perf_counter() - t0) * 1e6 / 15
-            _row(f"fig2_{attack}_{name}", us,
-                 f"final_return={np.mean(out['returns'][-3:]):.1f}")
+    # paper-exact: 3 of 13 agents Byzantine (the largest count tolerated by
+    # Assumption 1); aggregator axis "mean" is the naive Dec-PAGE-PG
+    # baseline (no agreement), "rfa" is DecByzPG.
+    grid = ScenarioGrid(seeds=SEEDS, K=(13,), n_byz=(3,),
+                        attack=("random_action", "large_noise", "avg_zero"),
+                        aggregator=("rfa", "mean"))
+    names = {"rfa": "decbyzpg", "mean": "dec_page_pg"}
+    _grid_rows(env, grid, T_FIG, "decbyzpg",
+               lambda s: f"fig2_{s.attack}_{names[s.aggregator]}",
+               N=20, B=4, eta=2e-2,
+               override=lambda c: dc.replace(
+                   c, kappa=0 if c.aggregator == "mean" else 4))
 
 
 # ---------------------------------------------------------------------------
@@ -78,18 +103,53 @@ def fig2_attacks():
 # ---------------------------------------------------------------------------
 
 def fig5_byzpg_attacks():
-    from repro.core.byzpg import ByzPGConfig, run_byzpg
+    from repro.core.engine import ScenarioGrid
     from repro.rl.envs import make_cartpole
     env = make_cartpole(horizon=100)
-    for attack in ("large_noise", "avg_zero"):
-        for name, agg in (("byzpg", "rfa"), ("fed_page_pg", "mean")):
-            cfg = ByzPGConfig(K=13, n_byz=3, attack=attack, aggregator=agg,
-                              N=20, B=4, eta=2e-2, seed=0)
-            t0 = time.perf_counter()
-            out = run_byzpg(env, cfg, T=15)
-            us = (time.perf_counter() - t0) * 1e6 / 15
-            _row(f"fig5_{attack}_{name}", us,
-                 f"final_return={np.mean(out['returns'][-3:]):.1f}")
+    grid = ScenarioGrid(seeds=SEEDS, K=(13,), n_byz=(3,),
+                        attack=("large_noise", "avg_zero"),
+                        aggregator=("rfa", "mean"))
+    names = {"rfa": "byzpg", "mean": "fed_page_pg"}
+    _grid_rows(env, grid, T_FIG, "byzpg",
+               lambda s: f"fig5_{s.attack}_{names[s.aggregator]}",
+               N=20, B=4, eta=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# Micro: fused scan engine vs legacy per-step dispatch loop
+# ---------------------------------------------------------------------------
+
+def bench_engine():
+    """The tentpole comparison: one fused lax.scan program (compiled once,
+    cached) vs the legacy harness (Python T-loop, jit re-dispatch + host
+    sync every iteration, fresh jit per call — the pre-engine execution
+    model) on the fig1 K=13 CartPole config."""
+    from repro.core.decbyzpg import (DecByzPGConfig, run_decbyzpg,
+                                     run_decbyzpg_legacy)
+    from repro.rl.envs import make_cartpole
+    env = make_cartpole(horizon=100)
+    cfg = DecByzPGConfig(K=13, N=20, B=4, kappa=4, eta=2e-2, seed=0)
+    T = 15
+
+    run_decbyzpg_legacy(env, cfg, T)               # process warm-up
+    t0 = time.perf_counter()
+    out_l = run_decbyzpg_legacy(env, cfg, T)
+    legacy_us = (time.perf_counter() - t0) * 1e6 / T
+
+    t0 = time.perf_counter()
+    run_decbyzpg(env, cfg, T)                      # cold: includes compile
+    fused_cold_us = (time.perf_counter() - t0) * 1e6 / T
+    t0 = time.perf_counter()
+    out_f = run_decbyzpg(env, cfg, T)
+    fused_us = (time.perf_counter() - t0) * 1e6 / T
+
+    match = np.allclose(out_f["returns"], out_l["returns"], atol=1e-4)
+    _row("bench_engine_legacy_perstep", legacy_us,
+         "per_iter_jit_dispatch+host_sync;rejit_per_call")
+    _row("bench_engine_fused_cold", fused_cold_us, "includes_compile")
+    _row("bench_engine_fused_scan", fused_us,
+         f"speedup_vs_legacy={legacy_us / fused_us:.1f}x;"
+         f"trace_matches_legacy={match}")
 
 
 # ---------------------------------------------------------------------------
@@ -220,6 +280,7 @@ ALL = {
     "fig1_speedup": fig1_speedup,
     "fig2_attacks": fig2_attacks,
     "fig5_byzpg_attacks": fig5_byzpg_attacks,
+    "bench_engine": bench_engine,
     "bench_aggregators": bench_aggregators,
     "bench_agreement": bench_agreement,
     "bench_kernels": bench_kernels,

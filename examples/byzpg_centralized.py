@@ -1,6 +1,7 @@
 """Centralized ByzPG (paper Algorithm 1 / Figs. 5-6): the warm-up method —
 trusted server, robust aggregation of worker PG estimates, PAGE small-batch
-steps at the server only.
+steps at the server only.  Both arms run as one fused-engine ScenarioGrid
+call with the seed batch vmapped.
 
   PYTHONPATH=src python examples/byzpg_centralized.py [--iters 30]
 """
@@ -9,9 +10,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-import numpy as np
-
-from repro.core.byzpg import ByzPGConfig, run_byzpg
+from repro.core.engine import Scenario, ScenarioGrid, run_grid
 from repro.rl.envs import make_cartpole
 
 
@@ -19,19 +18,21 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=30)
     ap.add_argument("--attack", default="large_noise")
+    ap.add_argument("--seeds", type=int, default=3)
     args = ap.parse_args()
     env = make_cartpole(horizon=200)
-    common = dict(K=13, n_byz=3, attack=args.attack, N=20, B=4, eta=2e-2,
-                  seed=0)
-    robust = run_byzpg(env, ByzPGConfig(aggregator="rfa", **common),
-                       T=args.iters)
-    naive = run_byzpg(env, ByzPGConfig(aggregator="mean", **common),
-                      T=args.iters)
-    print(f"attack={args.attack}, 3/13 Byzantine (centralized)")
+    grid = ScenarioGrid(seeds=tuple(range(args.seeds)), K=(13,), n_byz=(3,),
+                        attack=(args.attack,), aggregator=("rfa", "mean"))
+    res = run_grid(env, grid, args.iters, algo="byzpg", N=20, B=4, eta=2e-2)
+    robust = res[Scenario(13, 3, args.attack, "rfa", "mda")]
+    naive = res[Scenario(13, 3, args.attack, "mean", "mda")]
+    print(f"attack={args.attack}, 3/13 Byzantine (centralized, "
+          f"{args.seeds} seeds)")
     print(f"ByzPG (RFA):        final return "
-          f"{np.mean(robust['returns'][-5:]):.1f}")
+          f"{robust['final_return_mean']:.1f}"
+          f"±{robust['final_return_ci95']:.1f}")
     print(f"Fed-PAGE-PG (mean): final return "
-          f"{np.mean(naive['returns'][-5:]):.1f}")
+          f"{naive['final_return_mean']:.1f}±{naive['final_return_ci95']:.1f}")
 
 
 if __name__ == "__main__":

@@ -1,39 +1,49 @@
 """Paper Fig. 1: speed-up of DecByzPG with federation size K (honest case).
 
+One ScenarioGrid call over the K axis through the fused engine, seeds
+vmapped; K=1 recovers PAGE-PG.
+
   PYTHONPATH=src python examples/federation_speedup.py [--iters 30]
 """
 import argparse
+import dataclasses
 import sys
 
 sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core.decbyzpg import DecByzPGConfig, run_decbyzpg
+from repro.core.engine import ScenarioGrid, run_grid
 from repro.rl.envs import make_cartpole
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=30)
+    ap.add_argument("--seeds", type=int, default=3)
     args = ap.parse_args()
     env = make_cartpole(horizon=200)
-    print("== DecByzPG speed-up in K (alpha=0); K=1 is PAGE-PG ==")
-    curves = {}
-    for K in (1, 5, 13):
-        out = run_decbyzpg(env, DecByzPGConfig(
-            K=K, N=20, B=4, kappa=4 if K > 1 else 0, eta=2e-2, seed=0),
-            T=args.iters)
-        curves[K] = out
-        print(f"K={K:2d}: final return {np.mean(out['returns'][-5:]):6.1f} "
-              f"after {out['samples'][-1]} samples/agent")
-    # return achieved at a fixed per-agent sample budget
-    budget = curves[13]["samples"][-1]
-    print(f"\nreturn at equal per-agent sample budget ({budget}):")
+    print(f"== DecByzPG speed-up in K (alpha=0, {args.seeds} seeds); "
+          f"K=1 is PAGE-PG ==")
+    res = run_grid(env, ScenarioGrid(seeds=tuple(range(args.seeds)),
+                                     K=(1, 5, 13)),
+                   args.iters, algo="decbyzpg", N=20, B=4, eta=2e-2,
+                   override=lambda c: dataclasses.replace(
+                       c, kappa=4 if c.K > 1 else 0))
+    curves = {scn.K: out for scn, out in res.items()}
     for K, out in curves.items():
-        idx = int(np.searchsorted(out["samples"], budget))
-        idx = min(idx, len(out["returns"]) - 1)
-        print(f"  K={K:2d}: {np.mean(out['returns'][max(idx-2,0):idx+1]):.1f}")
+        print(f"K={K:2d}: final return {out['final_return_mean']:6.1f}"
+              f"±{out['final_return_ci95']:.1f} after "
+              f"{out['samples'][:, -1].mean():.0f} samples/agent")
+    # return achieved at a fixed per-agent sample budget
+    budget = curves[13]["samples"].mean(axis=0)[-1]
+    print(f"\nreturn at equal per-agent sample budget ({budget:.0f}):")
+    for K, out in curves.items():
+        samples = out["samples"].mean(axis=0)
+        idx = min(int(np.searchsorted(samples, budget)),
+                  out["returns_mean"].shape[0] - 1)
+        r = out["returns_mean"][max(idx - 2, 0):idx + 1].mean()
+        print(f"  K={K:2d}: {r:.1f}")
 
 
 if __name__ == "__main__":

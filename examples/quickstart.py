@@ -2,17 +2,19 @@
 
 13 agents, 3 Byzantine running the AvgZero attack; DecByzPG (bucketed RFA
 aggregation + GDA averaging agreement) vs the naive Dec-PAGE-PG baseline.
+Both arms run through the fused experiment engine as one ScenarioGrid
+call: the aggregator axis is vmapped over ``--seeds`` seeds and each
+T-iteration loop is a single compiled scan program.
 
-  PYTHONPATH=src python examples/quickstart.py [--iters 40]
+  PYTHONPATH=src python examples/quickstart.py [--iters 40] [--seeds 3]
 """
 import argparse
+import dataclasses
 import sys
 
 sys.path.insert(0, "src")
 
-import numpy as np
-
-from repro.core.decbyzpg import DecByzPGConfig, run_decbyzpg
+from repro.core.engine import Scenario, ScenarioGrid, run_grid
 from repro.rl.envs import make_cartpole
 
 
@@ -20,26 +22,35 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=40)
     ap.add_argument("--attack", default="avg_zero")
+    ap.add_argument("--seeds", type=int, default=3)
     args = ap.parse_args()
 
     env = make_cartpole(horizon=200)
-    common = dict(K=13, n_byz=3, attack=args.attack, N=20, B=4,
-                  eta=2e-2, seed=0)
+    grid = ScenarioGrid(seeds=tuple(range(args.seeds)), K=(13,), n_byz=(3,),
+                        attack=(args.attack,), aggregator=("rfa", "mean"))
     print(f"== DecByzPG (robust) vs Dec-PAGE-PG (naive), attack="
-          f"{args.attack}, 3/13 Byzantine ==")
-    robust = run_decbyzpg(env, DecByzPGConfig(
-        aggregator="rfa", kappa=5, **common), T=args.iters)
-    naive = run_decbyzpg(env, DecByzPGConfig(
-        aggregator="mean", kappa=0, **common), T=args.iters)
-    print(f"{'samples/agent':>14s} {'DecByzPG':>10s} {'Dec-PAGE-PG':>12s}")
+          f"{args.attack}, 3/13 Byzantine, {args.seeds} seeds ==")
+    res = run_grid(env, grid, args.iters, algo="decbyzpg",
+                   N=20, B=4, eta=2e-2,
+                   override=lambda c: dataclasses.replace(
+                       c, kappa=0 if c.aggregator == "mean" else 5))
+    robust = res[Scenario(13, 3, args.attack, "rfa", "mda")]
+    naive = res[Scenario(13, 3, args.attack, "mean", "mda")]
+
+    print(f"{'samples/agent':>14s} {'DecByzPG':>16s} {'Dec-PAGE-PG':>16s}")
+    budget = robust["samples"].mean(axis=0)
     for i in range(0, args.iters, max(args.iters // 10, 1)):
-        print(f"{robust['samples'][i]:14d} {robust['returns'][i]:10.1f} "
-              f"{naive['returns'][i]:12.1f}")
-    print(f"final (mean of last 5): DecByzPG="
-          f"{np.mean(robust['returns'][-5:]):.1f}  "
-          f"Dec-PAGE-PG={np.mean(naive['returns'][-5:]):.1f}")
+        print(f"{budget[i]:14.0f} "
+              f"{robust['returns_mean'][i]:8.1f}±{robust['returns_ci95'][i]:<7.1f} "
+              f"{naive['returns_mean'][i]:8.1f}±{naive['returns_ci95'][i]:<7.1f}")
+    print(f"final (mean of last 3, ±95% CI over seeds): "
+          f"DecByzPG={robust['final_return_mean']:.1f}"
+          f"±{robust['final_return_ci95']:.1f}  "
+          f"Dec-PAGE-PG={naive['final_return_mean']:.1f}"
+          f"±{naive['final_return_ci95']:.1f}")
     print(f"honest parameter diameter under attack: "
-          f"{robust['diameter'][-1]:.2e} (agreement keeps agents synced)")
+          f"{robust['diameter'][:, -1].mean():.2e} "
+          f"(agreement keeps agents synced)")
 
 
 if __name__ == "__main__":

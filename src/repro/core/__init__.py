@@ -1,5 +1,7 @@
 from repro.core.aggregators import get_aggregator
 from repro.core.agreement import avg_agree, gda_mean, honest_diameter, mda_mean
 from repro.core.attacks import ATTACKS, get_attack, per_receiver
-from repro.core.byzpg import ByzPGConfig, run_byzpg
-from repro.core.decbyzpg import DecByzPGConfig, run_decbyzpg
+from repro.core.byzpg import ByzPGConfig, run_byzpg, run_byzpg_legacy
+from repro.core.decbyzpg import (DecByzPGConfig, run_decbyzpg,
+                                 run_decbyzpg_legacy)
+from repro.core.engine import Scenario, ScenarioGrid, run_grid

@@ -111,15 +111,21 @@ def resilient_momentum_update(agg: Callable, momenta, beta: float,
 
 def bucketing(inner: Callable, x, key, bucket_size: int):
     """Randomly permute inputs, average buckets of ``bucket_size``, then apply
-    the inner aggregator to the bucket means (Karimireddy et al. [33])."""
+    the inner aggregator to the bucket means (Karimireddy et al. [33]).
+
+    The key is split between the permutation and the inner aggregator so a
+    key-consuming inner (e.g. DnC-style subsampling) gets fresh randomness
+    instead of silently receiving none.
+    """
     K, d = x.shape
     n_buckets = -(-K // bucket_size)
-    perm = jax.random.permutation(key, K)
+    k_perm, k_inner = jax.random.split(key)
+    perm = jax.random.permutation(k_perm, K)
     pad = n_buckets * bucket_size - K
     # pad by repeating the first permuted entries so every bucket is full
     idx = jnp.concatenate([perm, perm[:pad]]) if pad else perm
     means = jnp.mean(x[idx].reshape(n_buckets, bucket_size, d), axis=1)
-    return inner(means)
+    return inner(means, key=k_inner)
 
 
 # ---------------------------------------------------------------------------

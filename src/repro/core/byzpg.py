@@ -13,6 +13,15 @@ Faithful simulator of the paper's Algorithm 1 over K agents:
 The paper's experiments apply Adam to the PAGE direction (App. D) — we
 support both plain ascent (`optimizer="sgd"`, faithful to Algorithm 1 line
 12) and Adam.
+
+Like DecByzPG, the T-loop is one fused ``lax.scan`` (DESIGN.md §2): the
+coin comes from a folded PRNG stream inside the scan and every step keeps
+the fixed (K, max(N, B)) trajectory shape, with estimator weights masking
+small steps down to B.  The server's small-batch stream is the last agent
+slot (slot K-1 is honest for any tolerated n_byz < K; in the centralized
+protocol all workers hold the same θ_t, so slot K-1's trajectories are
+exactly a fresh server sample).  ``run_byzpg_legacy`` keeps the per-step
+dispatch harness.
 """
 from __future__ import annotations
 
@@ -24,10 +33,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import attacks as attacks_lib
+from repro.core import engine
 from repro.core.aggregators import get_aggregator
-from repro.core.tree import ravel, stack_ravel, unstack_unravel
+from repro.core.tree import ravel
 from repro.optim.optimizers import get_optimizer
 from repro.rl.gradient import grad_estimate, weighted_grad_estimate
+from repro.rl.policy import init_mlp, mlp_sizes, mlp_unraveler
 from repro.rl.rollout import batch_return, sample_batch
 
 
@@ -54,82 +65,127 @@ class ByzPGConfig:
         return self.p if self.p is not None else self.B / self.N
 
 
-def _agent_grads(env, params, keys, cfg, scales):
-    """Stacked per-agent large-batch PG estimates ṽ^(k): (K, d)."""
+def _optimizer(cfg):
+    return get_optimizer(cfg.optimizer, cfg.eta)
 
-    def one(key, scale):
-        traj = sample_batch(env, params, key, cfg.N, cfg.activation,
-                            logit_scale=scale)
-        g = grad_estimate(params, traj, cfg.gamma, cfg.baseline,
-                          cfg.estimator, cfg.activation)
-        return ravel(g)[0], jnp.mean(batch_return(traj))
 
-    return jax.vmap(one)(keys, scales)
+def init_byzpg_carry(env, cfg: ByzPGConfig, k_init):
+    """(θ (d,), θ_prev, v_prev, opt_state) — traceable for grid lanes."""
+    vec0 = ravel(init_mlp(k_init, mlp_sizes(env, cfg.hidden)))[0]
+    opt_state = _optimizer(cfg).init(vec0)
+    return vec0, jnp.array(vec0), jnp.zeros_like(vec0), opt_state
+
+
+def build_byzpg_step(env, cfg: ByzPGConfig):
+    """One fixed-shape iteration ``step(carry, (t, key), coin_key)``."""
+    unravel, _ = mlp_unraveler(env, cfg.hidden)
+    byz_mask = jnp.asarray(np.arange(cfg.K) < cfg.n_byz)
+    env_level = cfg.attack in attacks_lib.ENV_LEVEL_ATTACKS
+    attack = attacks_lib.get_attack(cfg.attack)
+    agg = get_aggregator(cfg.aggregator, cfg.K, cfg.n_byz)
+    opt = _optimizer(cfg)
+    scales = jnp.where(byz_mask & env_level, 0.0, 1.0)
+
+    M = max(cfg.N, cfg.B)
+    idx = jnp.arange(M)
+    w_large = jnp.where(idx < cfg.N, 1.0 / cfg.N, 0.0)
+    w_small = jnp.where(idx < cfg.B, 1.0 / cfg.B, 0.0)
+    server = cfg.K - 1          # honest slot backing the server's stream
+
+    def step(carry, xs, coin_key):
+        vec, prev_vec, v_prev, opt_state = carry
+        t, key = xs
+        coin = engine.page_coin(coin_key, t, cfg.switch_p)
+        w = jnp.where(coin, w_large, w_small)
+        k_traj, k_att, k_agg = jax.random.split(key, 3)
+        params = unravel(vec)
+        prev = unravel(prev_vec)
+
+        def one(k, scale):
+            traj = sample_batch(env, params, k, M, cfg.activation,
+                                logit_scale=scale)
+            g = ravel(grad_estimate(params, traj, cfg.gamma, cfg.baseline,
+                                    cfg.estimator, cfg.activation,
+                                    sample_weights=w))[0]
+            g_old = ravel(weighted_grad_estimate(
+                prev, params, traj, cfg.gamma, cfg.baseline,
+                cfg.estimator, cfg.activation,
+                sample_weights=w_small))[0]
+            return g, g_old, jnp.sum(w * batch_return(traj))
+
+        g, g_old, rets = jax.vmap(one)(jax.random.split(k_traj, cfg.K),
+                                       scales)
+        msgs = attack(g, byz_mask, k_att)
+        v_large = agg(msgs, k_agg)
+        # small step: w == w_small, so g[server] is exactly ĝ_B(θ_t) on the
+        # server's fresh batch and g_old[server] the IS estimate at θ_prev.
+        v_page = g[server] + v_prev - g_old[server]
+        v = jnp.where(coin, v_large, v_page)
+        new_vec, opt_state = opt.update(v, opt_state, vec)
+        honest_ret = jnp.sum(jnp.where(byz_mask, 0.0, rets)) \
+            / jnp.maximum(jnp.sum(~byz_mask), 1)
+        ret = jnp.where(coin, honest_ret, rets[server])
+        return (new_vec, vec, v, opt_state), (ret, coin)
+
+    return step
+
+
+def build_byzpg_loop(env, cfg: ByzPGConfig, T: int):
+    """Pure fused loop: one ``lax.scan`` over T iterations."""
+    step = build_byzpg_step(env, cfg)
+
+    def loop(vec0, prev_vec0, v0, opt_state0, step_keys, coin_key):
+        (vec, _, _, _), (rets, coins) = jax.lax.scan(
+            lambda carry, xs: step(carry, xs, coin_key),
+            (vec0, prev_vec0, v0, opt_state0),
+            (jnp.arange(T), step_keys))
+        return {"vec": vec, "returns": rets, "coins": coins}
+
+    return loop
+
+
+def fused_byzpg(env, cfg: ByzPGConfig, T: int):
+    key = ("byzpg", env.name, env.horizon, engine.static_key(cfg), T)
+    return engine.compiled(key, lambda: jax.jit(
+        build_byzpg_loop(env, cfg, T),
+        donate_argnums=engine.donate_args(0, 1, 2, 3)))
+
+
+def _finalize(cfg, unravel, hist, eval_every: int) -> dict:
+    coins = np.asarray(hist["coins"])
+    samples = np.cumsum(np.where(coins, cfg.N, cfg.B))
+    return {"returns": np.asarray(hist["returns"])[::eval_every],
+            "samples": samples[::eval_every],
+            "params": unravel(hist["vec"])}
 
 
 def run_byzpg(env, cfg: ByzPGConfig, T: int, eval_every: int = 1):
     """Returns dict(history of honest mean returns, sampled trajectories per
     agent, final params)."""
-    key = jax.random.PRNGKey(cfg.seed)
-    key, k_init = jax.random.split(key)
-    from repro.rl.policy import init_mlp
-    params = init_mlp(k_init, (env.obs_dim, *cfg.hidden, env.n_actions))
-    vec0, unravel = ravel(params)
+    ks = engine.seed_keys(cfg.seed)
+    unravel, _ = mlp_unraveler(env, cfg.hidden)
+    carry = init_byzpg_carry(env, cfg, ks.init)
+    loop = fused_byzpg(env, cfg, T)
+    hist = jax.block_until_ready(
+        loop(*carry, jax.random.split(ks.loop, T), ks.coin))
+    return _finalize(cfg, unravel, hist, eval_every)
 
-    byz_mask = np.zeros(cfg.K, bool)
-    byz_mask[:cfg.n_byz] = True       # which slots are Byzantine (H_t fixed
-    byz_mask = jnp.asarray(byz_mask)  # WLOG in the sim; roles are symmetric)
-    env_level = cfg.attack in attacks_lib.ENV_LEVEL_ATTACKS
-    attack = attacks_lib.get_attack(cfg.attack)
-    agg = get_aggregator(cfg.aggregator, cfg.K, cfg.n_byz)
-    opt = get_optimizer(cfg.optimizer, cfg.eta)
-    scales = jnp.where(byz_mask & env_level, 0.0, 1.0)
 
-    @jax.jit
-    def large_step(params, opt_state, key):
-        k_traj, k_att, k_agg = jax.random.split(key, 3)
-        tilde_v, rets = _agent_grads(env, params, jax.random.split(
-            k_traj, cfg.K), cfg, scales)
-        msgs = attack(tilde_v, byz_mask, k_att)
-        v = agg(msgs, k_agg)
-        g = unravel(v)
-        new_params, opt_state = opt.update(g, opt_state, params)
-        honest_ret = jnp.sum(jnp.where(byz_mask, 0.0, rets)) \
-            / jnp.maximum(jnp.sum(~byz_mask), 1)
-        return new_params, opt_state, v, honest_ret
-
-    @jax.jit
-    def small_step(params, prev_params, v_prev, opt_state, key):
-        traj = sample_batch(env, params, key, cfg.B, cfg.activation)
-        g_new = ravel(grad_estimate(params, traj, cfg.gamma, cfg.baseline,
-                                    cfg.estimator, cfg.activation))[0]
-        g_old = ravel(weighted_grad_estimate(
-            prev_params, params, traj, cfg.gamma, cfg.baseline,
-            cfg.estimator, cfg.activation))[0]
-        v = g_new + v_prev - g_old
-        new_params, opt_state = opt.update(unravel(v), opt_state, params)
-        return new_params, opt_state, v, jnp.mean(batch_return(traj))
-
-    rng = np.random.default_rng(cfg.seed + 1)   # Common-Sample coin
-    opt_state = opt.init(params)
-    v_prev = jnp.zeros_like(vec0)
-    prev_params = params
-    hist_returns, hist_samples = [], []
-    n_samples = 0
+def run_byzpg_legacy(env, cfg: ByzPGConfig, T: int, eval_every: int = 1):
+    """Per-step dispatch harness over the same step function (fresh jit per
+    call, host sync per iteration) — kept for equivalence tests and the
+    ``bench_engine`` baseline."""
+    ks = engine.seed_keys(cfg.seed)
+    unravel, _ = mlp_unraveler(env, cfg.hidden)
+    carry = init_byzpg_carry(env, cfg, ks.init)
+    step = jax.jit(build_byzpg_step(env, cfg))
+    step_keys = jax.random.split(ks.loop, T)
+    rets, coins = [], []
     for t in range(T):
-        key, k_step = jax.random.split(key)
-        c = 1 if t == 0 else int(rng.random() < cfg.switch_p)
-        if c:
-            new_params, opt_state, v_prev, ret = large_step(
-                params, opt_state, k_step)
-            n_samples += cfg.N
-        else:
-            new_params, opt_state, v_prev, ret = small_step(
-                params, prev_params, v_prev, opt_state, k_step)
-            n_samples += cfg.B
-        prev_params, params = params, new_params
-        if t % eval_every == 0:
-            hist_returns.append(float(ret))
-            hist_samples.append(n_samples)
-    return {"returns": hist_returns, "samples": hist_samples,
-            "params": params}
+        carry, (ret, coin) = step(carry, (jnp.int32(t), step_keys[t]),
+                                  ks.coin)
+        rets.append(float(ret))
+        coins.append(bool(coin))
+    hist = {"vec": carry[0], "returns": np.asarray(rets),
+            "coins": np.asarray(coins)}
+    return _finalize(cfg, unravel, hist, eval_every)

@@ -13,6 +13,15 @@ Per iteration t, every agent k:
 
 ``aggregator="mean", kappa=0`` recovers the naive Dec-PAGE-PG baseline;
 ``K=1`` recovers PAGE-PG — exactly the baselines of the paper's Figures 2-3.
+
+The T-iteration loop is one fused ``jax.lax.scan`` program (DESIGN.md §2):
+the coin is drawn inside the scan from a folded PRNG stream, every step
+samples a fixed max(N, B)-shaped trajectory batch masked down to B by
+sample weights on small steps (one compiled step, no dual-jit), the
+(θ, θ_prev, opt) carry is donated, and histories come back stacked
+on-device.  ``run_decbyzpg_legacy`` keeps the per-step dispatch harness
+(fresh jit per call, host sync per iteration) for equivalence tests and
+the ``bench_engine`` comparison.
 """
 from __future__ import annotations
 
@@ -24,11 +33,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import attacks as attacks_lib
+from repro.core import engine
 from repro.core.agreement import avg_agree, honest_diameter
 from repro.core.aggregators import get_aggregator
-from repro.core.tree import ravel, stack_ravel, unstack_unravel
+from repro.core.tree import ravel
 from repro.rl.gradient import grad_estimate, weighted_grad_estimate
-from repro.rl.policy import init_mlp
+from repro.rl.policy import init_mlp, mlp_sizes, mlp_unraveler
 from repro.rl.rollout import batch_return, sample_batch
 
 
@@ -58,40 +68,52 @@ class DecByzPGConfig:
         return self.p if self.p is not None else self.B / self.N
 
 
-def run_decbyzpg(env, cfg: DecByzPGConfig, T: int):
-    """Returns history of honest mean returns, per-agent sample counts, and
-    the honest parameter diameter trace (Lemma 1/2 diagnostic)."""
-    key = jax.random.PRNGKey(cfg.seed)
-    key, k_init = jax.random.split(key)
-    params0 = init_mlp(k_init, (env.obs_dim, *cfg.hidden, env.n_actions))
-    vec0, unravel = ravel(params0)
-    d = vec0.shape[0]
+def init_decbyzpg_carry(env, cfg: DecByzPGConfig, k_init):
+    """(θ_0 (K,d) common init, θ_prev, Adam (m, s2, t)) — traceable, so a
+    grid lane can build its own carry under vmap."""
+    vec0 = ravel(init_mlp(k_init, mlp_sizes(env, cfg.hidden)))[0]
+    theta0 = jnp.tile(vec0, (cfg.K, 1))
+    opt0 = (jnp.zeros_like(theta0), jnp.zeros_like(theta0), jnp.zeros(()))
+    return theta0, jnp.array(theta0), opt0
 
-    byz_mask = np.zeros(cfg.K, bool)
-    byz_mask[:cfg.n_byz] = True
-    byz_mask = jnp.asarray(byz_mask)
+
+def build_decbyzpg_step(env, cfg: DecByzPGConfig):
+    """One fixed-shape iteration ``step(carry, (t, key), coin_key)``.
+
+    Both coin branches run through the same compiled body: every agent
+    samples max(N, B) trajectories and the estimator weights select the
+    first N (large) or first B (small PAGE) of them, so there is exactly
+    one program regardless of the coin.
+    """
+    unravel, _ = mlp_unraveler(env, cfg.hidden)
+    byz_mask = jnp.asarray(np.arange(cfg.K) < cfg.n_byz)
     env_level = cfg.attack in attacks_lib.ENV_LEVEL_ATTACKS
     attack = attacks_lib.get_attack(cfg.attack)
     agr_attack = (attacks_lib.per_receiver(attack, cfg.K)
                   if cfg.per_receiver else attack)
     agg = get_aggregator(cfg.aggregator, cfg.K, cfg.n_byz)
     scales = jnp.where(byz_mask & env_level, 0.0, 1.0)
+    use_adam = cfg.optimizer == "adam"
 
-    def agent_estimate(theta_vec, theta_prev_vec, key, M, use_page, scale):
+    M = max(cfg.N, cfg.B)
+    idx = jnp.arange(M)
+    w_large = jnp.where(idx < cfg.N, 1.0 / cfg.N, 0.0)
+    w_small = jnp.where(idx < cfg.B, 1.0 / cfg.B, 0.0)
+
+    def agent_estimate(theta_vec, theta_prev_vec, key, w, scale):
         params = unravel(theta_vec)
+        prev = unravel(theta_prev_vec)
         traj = sample_batch(env, params, key, M, cfg.activation,
                             logit_scale=scale)
         g = ravel(grad_estimate(params, traj, cfg.gamma, cfg.baseline,
-                                cfg.estimator, cfg.activation))[0]
-        if use_page:
-            prev = unravel(theta_prev_vec)
-            g_old = ravel(weighted_grad_estimate(
-                prev, params, traj, cfg.gamma, cfg.baseline,
-                cfg.estimator, cfg.activation))[0]
-            g = g + (theta_vec - theta_prev_vec) / cfg.eta - g_old
-        return g, jnp.mean(batch_return(traj))
-
-    use_adam = cfg.optimizer == "adam"
+                                cfg.estimator, cfg.activation,
+                                sample_weights=w))[0]
+        # IS-corrected estimate at θ_prev on the small-batch slice; masked
+        # out on large steps by the coin select below.
+        g_old = ravel(weighted_grad_estimate(
+            prev, params, traj, cfg.gamma, cfg.baseline,
+            cfg.estimator, cfg.activation, sample_weights=w_small))[0]
+        return g, g_old, jnp.sum(w * batch_return(traj))
 
     def adam_step(v, m, s2, t):
         b1, b2, eps = 0.9, 0.999, 1e-8
@@ -101,58 +123,107 @@ def run_decbyzpg(env, cfg: DecByzPGConfig, T: int):
         upd = (m / (1 - b1 ** t)) / (jnp.sqrt(s2 / (1 - b2 ** t)) + eps)
         return upd, m, s2, t
 
-    def make_step(M, use_page):
-        @jax.jit
-        def step(theta, theta_prev, opt, key):
-            # theta, theta_prev: (K, d); opt: (m, s2, t) per agent
-            k_traj, k_att, k_agg, k_agr = jax.random.split(key, 4)
-            tilde_v, rets = jax.vmap(
-                lambda tv, tp, k, s: agent_estimate(tv, tp, k, M,
-                                                    use_page, s)
-            )(theta, theta_prev, jax.random.split(k_traj, cfg.K), scales)
-            msgs = attack(tilde_v, byz_mask, k_att)
-            # every agent aggregates the same broadcast set (v^(k));
-            # per-receiver inconsistency is exercised inside Avg-Agree.
-            v = jax.vmap(lambda k: agg(msgs, k))(
-                jax.random.split(k_agg, cfg.K))
-            if use_adam:
-                upd, m, s2, t = adam_step(v, *opt)
-                opt = (m, s2, t)
-            else:
-                upd = v
-            theta_tilde = theta + cfg.eta * upd
-            if cfg.kappa > 0:
-                theta_new = avg_agree(theta_tilde, cfg.kappa, cfg.n_byz,
-                                      byz_mask, cfg.agreement, agr_attack,
-                                      k_agr)
-            else:
-                theta_new = theta_tilde
-            honest_ret = jnp.sum(jnp.where(byz_mask, 0.0, rets)) \
-                / jnp.maximum(jnp.sum(~byz_mask), 1)
-            diam = honest_diameter(theta_new, ~byz_mask)
-            return theta_new, opt, honest_ret, diam
-        return step
+    def step(carry, xs, coin_key):
+        theta, theta_prev, opt = carry        # theta: (K, d)
+        t, key = xs
+        coin = engine.page_coin(coin_key, t, cfg.switch_p)
+        w = jnp.where(coin, w_large, w_small)
+        k_traj, k_att, k_agg, k_agr = jax.random.split(key, 4)
+        g, g_old, rets = jax.vmap(
+            lambda tv, tp, k, s: agent_estimate(tv, tp, k, w, s)
+        )(theta, theta_prev, jax.random.split(k_traj, cfg.K), scales)
+        page = (theta - theta_prev) / cfg.eta - g_old
+        tilde_v = jnp.where(coin, g, g + page)
+        msgs = attack(tilde_v, byz_mask, k_att)
+        # every agent aggregates the same broadcast set (v^(k));
+        # per-receiver inconsistency is exercised inside Avg-Agree.
+        v = jax.vmap(lambda k: agg(msgs, k))(
+            jax.random.split(k_agg, cfg.K))
+        if use_adam:
+            upd, m, s2, tt = adam_step(v, *opt)
+            opt = (m, s2, tt)
+        else:
+            upd = v
+        theta_tilde = theta + cfg.eta * upd
+        if cfg.kappa > 0:
+            theta_new = avg_agree(theta_tilde, cfg.kappa, cfg.n_byz,
+                                  byz_mask, cfg.agreement, agr_attack,
+                                  k_agr)
+        else:
+            theta_new = theta_tilde
+        honest_ret = jnp.sum(jnp.where(byz_mask, 0.0, rets)) \
+            / jnp.maximum(jnp.sum(~byz_mask), 1)
+        diam = honest_diameter(theta_new, ~byz_mask)
+        return (theta_new, theta, opt), (honest_ret, coin, diam)
 
-    large_step = make_step(cfg.N, False)
-    small_step = make_step(cfg.B, True)
+    return step
 
-    rng = np.random.default_rng(cfg.seed + 1)   # Common-Sample
-    theta = jnp.broadcast_to(vec0, (cfg.K, d))
-    theta_prev = theta
-    opt = (jnp.zeros((cfg.K, d)), jnp.zeros((cfg.K, d)), jnp.zeros(()))
-    hist_returns, hist_samples, hist_diam = [], [], []
-    n_samples = 0
-    for t in range(T):
-        key, k_step = jax.random.split(key)
-        c = 1 if t == 0 else int(rng.random() < cfg.switch_p)
-        step = large_step if c else small_step
-        new_theta, opt, ret, diam = step(theta, theta_prev, opt, k_step)
-        n_samples += cfg.N if c else cfg.B
-        theta_prev, theta = theta, new_theta
-        hist_returns.append(float(ret))
-        hist_samples.append(n_samples)
-        hist_diam.append(float(diam))
-    honest_idx = int(np.argmax(~np.asarray(byz_mask)))
-    return {"returns": hist_returns, "samples": hist_samples,
-            "diameter": hist_diam, "params": unravel(theta[honest_idx]),
+
+def build_decbyzpg_loop(env, cfg: DecByzPGConfig, T: int):
+    """Pure fused loop: one ``lax.scan`` over T iterations returning
+    stacked on-device histories (no per-step host traffic)."""
+    step = build_decbyzpg_step(env, cfg)
+
+    def loop(theta0, theta_prev0, opt0, step_keys, coin_key):
+        (theta, _, _), (rets, coins, diams) = jax.lax.scan(
+            lambda carry, xs: step(carry, xs, coin_key),
+            (theta0, theta_prev0, opt0),
+            (jnp.arange(T), step_keys))
+        return {"theta": theta, "returns": rets, "coins": coins,
+                "diameter": diams}
+
+    return loop
+
+
+def fused_decbyzpg(env, cfg: DecByzPGConfig, T: int):
+    """Jitted fused loop, cached per static config shape; the
+    (θ, θ_prev, opt) carry buffers are donated."""
+    key = ("decbyzpg", env.name, env.horizon, engine.static_key(cfg), T)
+    return engine.compiled(key, lambda: jax.jit(
+        build_decbyzpg_loop(env, cfg, T),
+        donate_argnums=engine.donate_args(0, 1, 2)))
+
+
+def _finalize(cfg, unravel, hist) -> dict:
+    coins = np.asarray(hist["coins"])
+    theta = hist["theta"]
+    honest_idx = min(cfg.n_byz, cfg.K - 1)
+    return {"returns": np.asarray(hist["returns"]),
+            "samples": np.cumsum(np.where(coins, cfg.N, cfg.B)),
+            "diameter": np.asarray(hist["diameter"]),
+            "params": unravel(theta[honest_idx]),
             "theta": theta}
+
+
+def run_decbyzpg(env, cfg: DecByzPGConfig, T: int):
+    """Returns history of honest mean returns, per-agent sample counts, and
+    the honest parameter diameter trace (Lemma 1/2 diagnostic)."""
+    ks = engine.seed_keys(cfg.seed)
+    unravel, _ = mlp_unraveler(env, cfg.hidden)
+    carry = init_decbyzpg_carry(env, cfg, ks.init)
+    loop = fused_decbyzpg(env, cfg, T)
+    hist = jax.block_until_ready(
+        loop(*carry, jax.random.split(ks.loop, T), ks.coin))
+    return _finalize(cfg, unravel, hist)
+
+
+def run_decbyzpg_legacy(env, cfg: DecByzPGConfig, T: int):
+    """Per-step dispatch harness over the *same* step function: a Python
+    T-loop, a fresh jit per call, and a host sync per iteration — the
+    pre-engine execution model, kept for the scan-vs-dispatch equivalence
+    test and the ``bench_engine`` baseline."""
+    ks = engine.seed_keys(cfg.seed)
+    unravel, _ = mlp_unraveler(env, cfg.hidden)
+    theta, theta_prev, opt = init_decbyzpg_carry(env, cfg, ks.init)
+    step = jax.jit(build_decbyzpg_step(env, cfg), static_argnums=())
+    step_keys = jax.random.split(ks.loop, T)
+    rets, coins, diams = [], [], []
+    for t in range(T):
+        (theta, theta_prev, opt), (ret, coin, diam) = step(
+            (theta, theta_prev, opt), (jnp.int32(t), step_keys[t]), ks.coin)
+        rets.append(float(ret))
+        coins.append(bool(coin))
+        diams.append(float(diam))
+    hist = {"theta": theta, "returns": np.asarray(rets),
+            "coins": np.asarray(coins), "diameter": np.asarray(diams)}
+    return _finalize(cfg, unravel, hist)

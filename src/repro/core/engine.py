@@ -1,0 +1,198 @@
+"""Fused experiment engine (DESIGN.md §2): compiled-loop cache, the
+Common-Sample coin stream, and vmapped multi-seed scenario grids.
+
+The training loops in :mod:`repro.core.decbyzpg` / :mod:`repro.core.byzpg`
+are single ``jax.lax.scan`` programs over iterations (one fixed-shape step,
+coin drawn *inside* the scan from a folded PRNG stream, stacked on-device
+histories).  This module supplies the layers above them:
+
+* ``compiled(key, build)`` — process-wide cache of jitted loops keyed by
+  the static configuration, so scenario sweeps compile each loop shape
+  exactly once (the legacy per-step harness re-jitted on every call);
+* ``seed_keys(seed)`` — the canonical PRNG split shared by single runs,
+  legacy loops, and grid lanes, so a grid lane for seed *s* replays the
+  exact key stream of ``run_*(cfg(seed=s))``;
+* ``ScenarioGrid`` / ``run_grid`` — declare a scenario product over
+  (K, n_byz, attack, aggregator, agreement) and a seed batch; seeds are
+  ``jax.vmap``-ed through the fused loop in one device program per
+  scenario, and results come back as a structured tree with mean ± CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Common-Sample coin + canonical key derivation
+# ---------------------------------------------------------------------------
+
+
+class SeedKeys(NamedTuple):
+    init: jnp.ndarray     # policy initialization
+    loop: jnp.ndarray     # per-iteration step keys (split into T)
+    coin: jnp.ndarray     # PAGE coin stream (folded per iteration)
+
+
+def seed_keys(seed) -> SeedKeys:
+    """Canonical (init, loop, coin) key split from an integer seed.
+
+    Traceable: ``seed`` may be a traced int32, so per-seed streams can be
+    derived *inside* a vmapped grid lane.
+    """
+    base = jax.random.PRNGKey(seed)
+    return SeedKeys(*jax.random.split(base, 3))
+
+
+def page_coin(coin_key, t, p: float):
+    """Common-Sample coin c_t ~ Be(p), forced to 1 at t=0, drawn from the
+    per-iteration fold of the shared coin key (identical for every honest
+    agent — the paper's shared-PRNG Common-Sample primitive)."""
+    draw = jax.random.bernoulli(jax.random.fold_in(coin_key, t), p)
+    return (t == 0) | draw
+
+
+# ---------------------------------------------------------------------------
+# Compiled-loop cache
+# ---------------------------------------------------------------------------
+
+_COMPILED: dict = {}
+
+
+def compiled(key, build: Callable):
+    """Return the cached compiled callable for ``key``, building (and
+    jitting) it on first use.  Keys must capture everything static about
+    the loop: algorithm, env identity, config minus seed, T, batch size."""
+    fn = _COMPILED.get(key)
+    if fn is None:
+        fn = _COMPILED[key] = build()
+    return fn
+
+
+def clear_cache() -> None:
+    _COMPILED.clear()
+
+
+def static_key(cfg):
+    """Config hashed without its seed (seeds are data, not program)."""
+    return dataclasses.replace(cfg, seed=0)
+
+
+def donate_args(*argnums):
+    """Carry-donation argnums, empty on CPU where donation is unimplemented
+    (it would only emit a "donated buffers were not usable" warning)."""
+    return argnums if jax.default_backend() != "cpu" else ()
+
+
+# ---------------------------------------------------------------------------
+# Scenario grids
+# ---------------------------------------------------------------------------
+
+
+class Scenario(NamedTuple):
+    K: int
+    n_byz: int
+    attack: str
+    aggregator: str
+    agreement: str
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioGrid:
+    """Cartesian scenario axes × a vmapped seed batch.
+
+    Every combination of the five axes becomes one compiled device program
+    (cached per static shape); the ``seeds`` axis is vmapped inside it.
+    """
+    seeds: Tuple[int, ...] = (0, 1, 2)
+    K: Tuple[int, ...] = (13,)
+    n_byz: Tuple[int, ...] = (0,)
+    attack: Tuple[str, ...] = ("none",)
+    aggregator: Tuple[str, ...] = ("rfa",)
+    agreement: Tuple[str, ...] = ("mda",)
+
+    def scenarios(self):
+        return itertools.product(self.K, self.n_byz, self.attack,
+                                 self.aggregator, self.agreement)
+
+
+def _algo(name: str):
+    if name == "decbyzpg":
+        from repro.core import decbyzpg as m
+        return m.DecByzPGConfig, m.build_decbyzpg_loop, m.init_decbyzpg_carry
+    if name == "byzpg":
+        from repro.core import byzpg as m
+        return m.ByzPGConfig, m.build_byzpg_loop, m.init_byzpg_carry
+    raise KeyError(f"unknown algorithm {name!r}")
+
+
+def seed_batch_loop(env, cfg, T: int, n_seeds: int, algo: str = "decbyzpg"):
+    """Compiled ``seeds (S,) int32 -> history dict`` with every per-seed
+    run (init + full T-iteration fused loop) vmapped into one program."""
+    _, build_loop, init_carry = _algo(algo)
+    key = ("grid", algo, env.name, env.horizon, static_key(cfg), T, n_seeds)
+
+    def build():
+        loop = build_loop(env, cfg, T)
+
+        def one_seed(seed):
+            ks = seed_keys(seed)
+            carry = init_carry(env, cfg, ks.init)
+            return loop(*carry, jax.random.split(ks.loop, T), ks.coin)
+
+        return jax.jit(jax.vmap(one_seed))
+
+    return compiled(key, build)
+
+
+def summarize(hist: dict, cfg) -> dict:
+    """Host-side statistics for one scenario's (S, T) seed batch."""
+    out = {k: np.asarray(v) for k, v in hist.items()}
+    coins = out.pop("coins")
+    out["samples"] = np.cumsum(np.where(coins, cfg.N, cfg.B), axis=-1)
+    rets = out["returns"]
+    S = rets.shape[0]
+    sem = (rets.std(axis=0, ddof=1) / np.sqrt(S)) if S > 1 \
+        else np.zeros(rets.shape[-1])
+    out["returns_mean"] = rets.mean(axis=0)
+    out["returns_ci95"] = 1.96 * sem
+    final = rets[:, -3:].mean(axis=-1)
+    out["final_return_mean"] = float(final.mean())
+    out["final_return_ci95"] = float(
+        1.96 * final.std(ddof=1) / np.sqrt(S)) if S > 1 else 0.0
+    return out
+
+
+def run_grid(env, grid: ScenarioGrid, T: int, algo: str = "decbyzpg",
+             override: Optional[Callable] = None, **base) -> dict:
+    """Run every scenario in ``grid`` for ``T`` iterations.
+
+    ``base`` sets non-axis config fields (N, B, eta, kappa, ...);
+    ``override(cfg) -> cfg`` applies per-scenario adjustments that are
+    functions of the axis values (e.g. fig2's kappa=0 naive baseline).
+    Returns ``{Scenario: summary dict}`` with per-seed histories plus
+    mean ± 95% CI curves.
+    """
+    cfg_cls, _, _ = _algo(algo)
+    fields = {f.name for f in dataclasses.fields(cfg_cls)}
+    unknown = set(base) - fields
+    if unknown:
+        raise TypeError(f"unknown {cfg_cls.__name__} fields: {sorted(unknown)}")
+    seeds = jnp.asarray(grid.seeds, jnp.int32)
+    results = {}
+    for K, n_byz, attack, aggregator, agreement in grid.scenarios():
+        axes = {"K": K, "n_byz": n_byz, "attack": attack,
+                "aggregator": aggregator, "agreement": agreement}
+        cfg = cfg_cls(**{k: v for k, v in {**base, **axes}.items()
+                         if k in fields})
+        if override is not None:
+            cfg = override(cfg)
+        loop = seed_batch_loop(env, cfg, T, len(grid.seeds), algo)
+        hist = jax.block_until_ready(loop(seeds))
+        results[Scenario(K, n_byz, attack, aggregator, agreement)] = \
+            summarize(hist, cfg)
+    return results

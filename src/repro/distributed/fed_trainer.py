@@ -71,23 +71,30 @@ def _loss(cfg, params, batch):
 
 
 def fed_train_step(cfg: ModelConfig, fed: FedConfig, state: FedState,
-                   batch, byz_mask, key, *, large: bool) -> tuple:
+                   batch, byz_mask, key, *, large) -> tuple:
     """batch: {'tokens': (K, b, S)[, 'prefix_embeds': (K, b, P, D)]}.
 
-    ``large`` is static (two compiled programs — the PAGE switch is resolved
-    by the host-side Common-Sample coin).
+    ``large`` is either a Python bool (static — two compiled programs, the
+    PAGE switch resolved by the host-side Common-Sample coin, the legacy
+    driver) or a traced boolean scalar (one compiled program with a
+    ``lax.cond`` PAGE switch — the fused-window driver, where the coin is
+    drawn inside the scan).
     Returns (new_state, metrics).
     """
     grad_fn = jax.grad(lambda p, b: _loss(cfg, p, b))
     loss_fn = jax.value_and_grad(lambda p, b: _loss(cfg, p, b))
 
     losses, g_new = jax.vmap(loss_fn)(state.params, batch)
-    if large:
-        tilde_v = g_new
-    else:
+
+    def _page(_):
         g_old = jax.vmap(grad_fn)(state.prev_params, batch)
-        tilde_v = jax.tree.map(lambda a, b, c: a - b + c,
-                               g_new, g_old, state.v)
+        return jax.tree.map(lambda a, b, c: a - b + c,
+                            g_new, g_old, state.v)
+
+    if isinstance(large, (bool, int)):
+        tilde_v = g_new if large else _page(None)
+    else:
+        tilde_v = jax.lax.cond(large, lambda _: g_new, _page, None)
 
     K = byz_mask.shape[0]
     k_att, k_agg = jax.random.split(key)
@@ -174,9 +181,40 @@ def make_fed_step(cfg: ModelConfig, fed: FedConfig, mesh, *, large: bool,
     return step, state_shape, batch, (state_sh, batch_sh, rep)
 
 
+def fed_coin_key(fed: FedConfig):
+    """Coin key of the fused window's in-scan Common-Sample stream (the
+    per-step replay in tests derives identical coins from it)."""
+    return jax.random.fold_in(jax.random.PRNGKey(fed.seed), 0x0C01)
+
+
+def fed_train_window(cfg: ModelConfig, fed: FedConfig, state: FedState,
+                     batches, byz_mask, ts, key) -> tuple:
+    """Fused multi-step driver: ``lax.scan`` a window of W federated steps
+    in one program (DESIGN.md §2).
+
+    batches: the per-step batch tree stacked on a leading W axis
+    ((W, K, b, S) tokens/labels); ts: (W,) global step indices.  The PAGE
+    coin is drawn inside the scan from the fold of a seed-derived coin key
+    (``engine.page_coin``), so the window needs no host round-trip per
+    iteration.  Returns (final state, metrics stacked (W,)).
+    """
+    from repro.core import engine
+    coin_key = fed_coin_key(fed)
+
+    def body(st, xs):
+        batch, t = xs
+        coin = engine.page_coin(coin_key, t, fed.page_p)
+        st, metrics = fed_train_step(cfg, fed, st, batch, byz_mask,
+                                     jax.random.fold_in(key, t), large=coin)
+        return st, dict(metrics, coin=coin)
+
+    return jax.lax.scan(body, state, (batches, ts))
+
+
 def common_sample_coin(step: int, seed: int, p: float) -> bool:
     """Common-Sample: the paper's shared PRNG coin (host-level, derived from
-    the common initialization seed)."""
+    the common initialization seed; the legacy per-step driver — the fused
+    window draws its coin in-scan via ``repro.core.engine.page_coin``)."""
     rng = np.random.default_rng(np.uint64(seed) * np.uint64(1_000_003)
                                 + np.uint64(step))
     return bool(step == 0 or rng.random() < p)

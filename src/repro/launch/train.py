@@ -4,6 +4,12 @@ Runs DecByzPG over any ``--arch`` with the synthetic token pipeline:
 Common-Sample PAGE coin -> per-agent gradients -> Byzantine attack (opt.)
 -> robust aggregation -> per-agent Adam -> Avg-Agree_κ.
 
+Steps execute through the fused experiment engine (DESIGN.md §2): windows
+of ``--window`` iterations run as one ``lax.scan`` program with the PAGE
+coin drawn in-scan, so the host only touches the device once per window.
+``--no-fused`` falls back to the legacy per-step dispatch driver (two
+compiled programs selected by the host-side coin).
+
 CPU-runnable with ``--reduced`` (the 2-layer family variant); on a real
 cluster drop ``--reduced`` and launch one process per host with the
 production mesh.
@@ -20,11 +26,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import save
-from repro.configs import base as config_base
 from repro.configs.base import get_config, reduced
+from repro.core import engine
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.distributed.fed_trainer import (FedConfig, common_sample_coin,
-                                           fed_train_step, init_fed_state)
+                                           fed_train_step, fed_train_window,
+                                           init_fed_state)
+
+
+def _stack_batches(batches: list) -> dict:
+    """List of per-step batch dicts -> one tree with a leading W axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
 
 
 def main() -> None:
@@ -43,6 +55,10 @@ def main() -> None:
     ap.add_argument("--page-p", type=float, default=0.25)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--window", type=int, default=5,
+                    help="steps fused into one scanned device program")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="legacy per-step dispatch (two compiled programs)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -62,24 +78,47 @@ def main() -> None:
         d_model=cfg.d_model, seed=args.seed))
     byz_mask = jnp.asarray(np.arange(K) < args.byz)
 
-    steps = {True: jax.jit(lambda s, b, m, k: fed_train_step(
-                 cfg, fed, s, b, m, k, large=True)),
-             False: jax.jit(lambda s, b, m, k: fed_train_step(
-                 cfg, fed, s, b, m, k, large=False))}
-
     print(f"arch={cfg.name} K={K} byz={args.byz} attack={args.attack} "
-          f"agg={args.aggregator} kappa={args.kappa}")
+          f"agg={args.aggregator} kappa={args.kappa} "
+          f"mode={'legacy' if args.no_fused else 'fused'}")
     t0 = time.time()
-    for step_i in range(args.steps):
-        c = common_sample_coin(step_i, args.seed, fed.page_p)
-        key, k_step = jax.random.split(key)
-        batch = pipe.batch(step_i)
-        state, metrics = steps[c](state, batch, byz_mask, k_step)
-        if step_i % max(args.steps // 10, 1) == 0 or step_i == args.steps - 1:
-            print(f"step {step_i:4d} c={int(c)} "
-                  f"loss={float(metrics['loss']):.4f} "
-                  f"diam={float(metrics['diameter']):.3e} "
-                  f"({time.time() - t0:.1f}s)", flush=True)
+
+    def report(step_i, coin, metrics):
+        print(f"step {step_i:4d} c={int(coin)} "
+              f"loss={float(metrics['loss']):.4f} "
+              f"diam={float(metrics['diameter']):.3e} "
+              f"({time.time() - t0:.1f}s)", flush=True)
+
+    if args.no_fused:
+        steps = {True: jax.jit(lambda s, b, m, k: fed_train_step(
+                     cfg, fed, s, b, m, k, large=True)),
+                 False: jax.jit(lambda s, b, m, k: fed_train_step(
+                     cfg, fed, s, b, m, k, large=False))}
+        for step_i in range(args.steps):
+            c = common_sample_coin(step_i, args.seed, fed.page_p)
+            key, k_step = jax.random.split(key)
+            state, metrics = steps[c](state, pipe.batch(step_i), byz_mask,
+                                      k_step)
+            if step_i % max(args.steps // 10, 1) == 0 \
+                    or step_i == args.steps - 1:
+                report(step_i, c, metrics)
+    else:
+        wstep = jax.jit(
+            lambda s, b, ts, k: fed_train_window(cfg, fed, s, b, byz_mask,
+                                                 ts, k),
+            donate_argnums=engine.donate_args(0))
+        key, k_loop = jax.random.split(key)
+        n_windows = -(-args.steps // args.window)
+        report_every = max(n_windows // 10, 1)
+        for w_i, w0 in enumerate(range(0, args.steps, args.window)):
+            ts = np.arange(w0, min(w0 + args.window, args.steps))
+            batches = _stack_batches([pipe.batch(int(t)) for t in ts])
+            state, metrics = wstep(state, batches, jnp.asarray(ts), k_loop)
+            if w_i % report_every == 0 or w_i == n_windows - 1:
+                last = jax.tree.map(lambda m: m[-1], metrics)
+                report(int(ts[-1]), bool(np.asarray(metrics["coin"][-1])),
+                       last)
+
     if args.ckpt:
         save(jax.tree.map(lambda l: l[0], state.params), args.ckpt)
         print(f"saved honest-agent-0 params to {args.ckpt}")

@@ -40,14 +40,21 @@ _SURROGATES = {"gpomdp": _gpomdp_surrogate, "reinforce": _reinforce_surrogate}
 
 def grad_estimate(params, traj: Trajectory, gamma: float,
                   baseline: float = 0.0, estimator: str = "gpomdp",
-                  activation: str = "tanh"):
-    """(1/M) Σ_i g(τ_i | θ): mean PG over a (M, H, ...) trajectory batch."""
+                  activation: str = "tanh", sample_weights=None):
+    """(1/M) Σ_i g(τ_i | θ): mean PG over a (M, H, ...) trajectory batch.
+
+    ``sample_weights`` (M,), summing to 1, replaces the uniform 1/M mean —
+    the fused engine uses it to mask a fixed max(N, B)-shaped batch down to
+    the B trajectories a small PAGE step actually consumes.
+    """
     sur = _SURROGATES[estimator]
 
     def loss(p):
         s = jax.vmap(lambda t: sur(p, t, gamma, baseline, activation)
                      )(traj)
-        return jnp.mean(s)
+        if sample_weights is None:
+            return jnp.mean(s)
+        return jnp.sum(sample_weights * s)
 
     return jax.grad(loss)(params)
 
@@ -68,14 +75,18 @@ def importance_weights(params_old, params_new, traj: Trajectory,
 
 def weighted_grad_estimate(params_old, params_new, traj: Trajectory,
                            gamma: float, baseline: float = 0.0,
-                           estimator: str = "gpomdp", activation="tanh"):
+                           estimator: str = "gpomdp", activation="tanh",
+                           sample_weights=None):
     """(1/M) Σ_i g^{ω_θnew}(τ_i | θ_old): IS-corrected PG at θ_old from
-    trajectories sampled at θ_new."""
+    trajectories sampled at θ_new. ``sample_weights`` as in
+    :func:`grad_estimate`."""
     w = importance_weights(params_old, params_new, traj, activation)
     sur = _SURROGATES[estimator]
 
     def loss(p):
         s = jax.vmap(lambda t: sur(p, t, gamma, baseline, activation))(traj)
-        return jnp.mean(w * s)
+        if sample_weights is None:
+            return jnp.mean(w * s)
+        return jnp.sum(sample_weights * w * s)
 
     return jax.grad(loss)(params_old)

@@ -6,6 +6,20 @@ import jax
 import jax.numpy as jnp
 
 
+def mlp_sizes(env, hidden) -> tuple:
+    """Layer sizes of the policy for ``env`` with the given hidden spec."""
+    return (env.obs_dim, *hidden, env.n_actions)
+
+
+def mlp_unraveler(env, hidden):
+    """(unravel_fn, d) for the flat policy vector — derived from a template
+    init (shapes only, seed-free), shared by the fused training loops."""
+    from jax.flatten_util import ravel_pytree
+    vec, unravel = ravel_pytree(init_mlp(jax.random.PRNGKey(0),
+                                         mlp_sizes(env, hidden)))
+    return unravel, vec.shape[0]
+
+
 def init_mlp(key, sizes, dtype=jnp.float32):
     """sizes: (obs_dim, h1, ..., n_actions)."""
     params = []

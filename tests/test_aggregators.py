@@ -58,6 +58,23 @@ def test_bucketing_reduces_to_inner_on_full_bucket():
     np.testing.assert_allclose(out, agg.rfa(x), atol=1e-5)
 
 
+def test_bucketing_forwards_key_to_inner():
+    """A key-consuming inner aggregator (e.g. DnC-style subsampling) must
+    receive a PRNG key from bucketing, not silently get none."""
+    x, _ = honest_byz_inputs(K=8, n_byz=0, byz_val=0.0)
+    keys_seen = []
+
+    def inner(means, key=None):
+        assert key is not None
+        keys_seen.append(np.asarray(key))
+        return jnp.mean(means, axis=0)
+
+    outer_key = jax.random.PRNGKey(7)
+    agg.bucketing(inner, x, outer_key, bucket_size=2)
+    # the forwarded key is a fresh split, never the raw outer key
+    assert not np.array_equal(keys_seen[0], np.asarray(outer_key))
+
+
 def test_robust_aggregation_definition_bound():
     """Empirical check of Def. 1: E||Agg(x) - honest_mean||^2 bounded by
     C*alpha/(|H|(|H|-1)) * sum of pairwise honest distances (C_ra ~ O(1))."""

@@ -1,0 +1,196 @@
+"""Fused experiment engine tests: scan-vs-legacy equivalence, scenario
+grids (shapes, determinism, seed-vmap), compiled-loop cache."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.core.byzpg import ByzPGConfig, run_byzpg, run_byzpg_legacy
+from repro.core.decbyzpg import (DecByzPGConfig, run_decbyzpg,
+                                 run_decbyzpg_legacy)
+from repro.core.engine import Scenario, ScenarioGrid, run_grid
+from repro.rl.envs import make_cartpole
+
+ENV = make_cartpole(horizon=20)
+T = 5
+
+
+def tiny_dec(**kw):
+    base = dict(K=3, n_byz=1, attack="sign_flip", aggregator="rfa",
+                agreement="gda", kappa=2, N=4, B=2, eta=1e-2,
+                hidden=(8,), seed=11)
+    base.update(kw)
+    return DecByzPGConfig(**base)
+
+
+def test_fused_scan_matches_legacy_decbyzpg():
+    """The fused lax.scan loop and the per-step dispatch loop run the same
+    step function over the same key/coin streams: the return, sample, and
+    diameter traces must coincide."""
+    cfg = tiny_dec()
+    fused = run_decbyzpg(ENV, cfg, T)
+    legacy = run_decbyzpg_legacy(ENV, cfg, T)
+    np.testing.assert_allclose(fused["returns"], legacy["returns"],
+                               atol=1e-5)
+    np.testing.assert_allclose(fused["diameter"], legacy["diameter"],
+                               atol=1e-6)
+    np.testing.assert_array_equal(fused["samples"], legacy["samples"])
+    np.testing.assert_allclose(fused["theta"], legacy["theta"], atol=1e-6)
+
+
+def test_fused_scan_matches_legacy_byzpg():
+    cfg = ByzPGConfig(K=3, n_byz=1, attack="large_noise", aggregator="rfa",
+                      N=4, B=2, eta=1e-2, hidden=(8,), seed=5)
+    fused = run_byzpg(ENV, cfg, T)
+    legacy = run_byzpg_legacy(ENV, cfg, T)
+    np.testing.assert_allclose(fused["returns"], legacy["returns"],
+                               atol=1e-5)
+    np.testing.assert_array_equal(fused["samples"], legacy["samples"])
+
+
+def test_coin_stream_first_step_large_and_reproducible():
+    cfg = tiny_dec()
+    out = run_decbyzpg(ENV, cfg, T)
+    # t=0 is forced to a large step (Algorithm 1/2 line 1)
+    assert out["samples"][0] == cfg.N
+    again = run_decbyzpg(ENV, cfg, T)
+    np.testing.assert_array_equal(out["returns"], again["returns"])
+
+
+def _grid(seeds=(0, 1, 2)):
+    return ScenarioGrid(seeds=seeds, K=(3,), n_byz=(1,),
+                        attack=("sign_flip", "large_noise"),
+                        aggregator=("rfa", "mean"), agreement=("gda",))
+
+
+GRID_KW = dict(N=4, B=2, eta=1e-2, kappa=2, hidden=(8,))
+
+
+def test_run_grid_shapes():
+    """(3 seeds) x (2 attacks) x (2 aggregators) in ONE call, seeds
+    vmapped inside each scenario's compiled program."""
+    res = run_grid(ENV, _grid(), T, algo="decbyzpg", **GRID_KW)
+    assert len(res) == 4
+    scn = Scenario(3, 1, "sign_flip", "rfa", "gda")
+    assert scn in res
+    out = res[scn]
+    assert out["returns"].shape == (3, T)
+    assert out["diameter"].shape == (3, T)
+    assert out["samples"].shape == (3, T)
+    assert out["returns_mean"].shape == (T,)
+    assert out["returns_ci95"].shape == (T,)
+    assert np.isfinite(out["final_return_mean"])
+    assert out["final_return_ci95"] >= 0.0
+    # every lane starts with the forced large step
+    np.testing.assert_array_equal(out["samples"][:, 0],
+                                  np.full(3, GRID_KW["N"]))
+    # distinct seeds produce distinct trajectories
+    assert not np.array_equal(out["returns"][0], out["returns"][1])
+
+
+def test_run_grid_deterministic_and_cached():
+    a = run_grid(ENV, _grid(), T, algo="decbyzpg", **GRID_KW)
+    n_compiled = len(engine._COMPILED)
+    b = run_grid(ENV, _grid(), T, algo="decbyzpg", **GRID_KW)
+    assert len(engine._COMPILED) == n_compiled     # loop cache reused
+    for scn in a:
+        np.testing.assert_array_equal(a[scn]["returns"], b[scn]["returns"])
+        np.testing.assert_array_equal(a[scn]["diameter"],
+                                      b[scn]["diameter"])
+
+
+def test_grid_lane_matches_single_run():
+    """A grid lane for seed s replays run_decbyzpg(cfg(seed=s)) exactly
+    (same canonical key split, coin stream, and step math under vmap)."""
+    cfg = tiny_dec(seed=2, attack="sign_flip", aggregator="rfa")
+    single = run_decbyzpg(ENV, cfg, T)
+    res = run_grid(ENV, ScenarioGrid(seeds=(2,), K=(3,), n_byz=(1,),
+                                     attack=("sign_flip",),
+                                     aggregator=("rfa",),
+                                     agreement=("gda",)),
+                   T, algo="decbyzpg", **GRID_KW)
+    out = res[Scenario(3, 1, "sign_flip", "rfa", "gda")]
+    np.testing.assert_allclose(out["returns"][0], single["returns"],
+                               atol=1e-5)
+    np.testing.assert_array_equal(out["samples"][0], single["samples"])
+
+
+def test_run_grid_byzpg():
+    res = run_grid(ENV, ScenarioGrid(seeds=(0, 1), K=(3,), n_byz=(1,),
+                                     attack=("large_noise",),
+                                     aggregator=("rfa", "mean")),
+                   T, algo="byzpg", N=4, B=2, eta=1e-2, hidden=(8,))
+    assert len(res) == 2
+    for out in res.values():
+        assert out["returns"].shape == (2, T)
+        assert np.all(np.isfinite(out["returns"]))
+
+
+def test_fed_train_window_matches_per_step():
+    """The fused fed window (lax.scan + traced-coin lax.cond) replays the
+    per-step driver exactly when fed the same key/coin streams."""
+    from repro.configs.base import get_config, reduced
+    from repro.distributed.fed_trainer import (FedConfig, fed_coin_key,
+                                               fed_train_step,
+                                               fed_train_window,
+                                               init_fed_state)
+    cfg = reduced(get_config("qwen2_5_3b"))
+    K, W = 2, 4
+    fed = FedConfig(aggregator="mean", kappa=0, lr=2e-3, page_p=0.5, seed=1)
+    key0 = jax.random.PRNGKey(0)
+    batches = [{"tokens": jax.random.randint(jax.random.PRNGKey(t),
+                                             (K, 2, 16), 0, cfg.vocab_size),
+                "labels": jax.random.randint(jax.random.PRNGKey(100 + t),
+                                             (K, 2, 16), 0, cfg.vocab_size)}
+               for t in range(W)]
+    mask = jnp.zeros((K,), bool)
+    k_loop = jax.random.PRNGKey(42)
+
+    state_a = init_fed_state(cfg, fed, K, key0)
+    state_a, metrics = fed_train_window(cfg, fed, state_a,
+                                        jax.tree.map(
+                                            lambda *xs: jnp.stack(xs),
+                                            *batches),
+                                        mask, jnp.arange(W), k_loop)
+
+    state_b = init_fed_state(cfg, fed, K, key0)
+    coins, losses = [], []
+    for t in range(W):
+        coin = bool(engine.page_coin(fed_coin_key(fed), t, fed.page_p))
+        coins.append(coin)
+        state_b, m = fed_train_step(cfg, fed, state_b, batches[t], mask,
+                                    jax.random.fold_in(k_loop, t),
+                                    large=coin)
+        losses.append(float(m["loss"]))
+
+    assert coins[0] is True                       # forced large at t=0
+    assert not all(coins)                         # PAGE branch exercised
+    np.testing.assert_array_equal(np.asarray(metrics["coin"]), coins)
+    np.testing.assert_allclose(np.asarray(metrics["loss"]), losses,
+                               rtol=1e-5, atol=1e-6)
+    # Adam divides near-zero second moments into cross-compilation float
+    # noise, so params only match to a fraction of the lr per step; a
+    # mis-wired coin branch would diverge at full lr scale instead.
+    for a, b in zip(jax.tree.leaves(state_a.params),
+                    jax.tree.leaves(state_b.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+def test_grid_override_adjusts_config():
+    """override() derives per-scenario fields from axis values (fig2's
+    kappa=0 naive baseline)."""
+    seen = {}
+
+    def override(cfg):
+        cfg = dataclasses.replace(cfg,
+                                  kappa=0 if cfg.aggregator == "mean" else 2)
+        seen[cfg.aggregator] = cfg.kappa
+        return cfg
+
+    run_grid(ENV, ScenarioGrid(seeds=(0,), K=(3,), n_byz=(0,),
+                               aggregator=("rfa", "mean"),
+                               agreement=("gda",)),
+             T, algo="decbyzpg", override=override, **GRID_KW)
+    assert seen == {"rfa": 2, "mean": 0}

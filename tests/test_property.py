@@ -1,5 +1,7 @@
 """Hypothesis property-based tests on system invariants (deliverable (c))."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import numpy as np

@@ -37,25 +37,27 @@ def _row(name, us, derived=""):
 
 SEEDS = (0, 1, 2)
 T_FIG = 15
+BENCH_ENV = "cartpole(horizon=100)"
 
 
-def _grid_rows(env, grid, T, algo, name_fn, **kw):
-    """Run a ScenarioGrid through the fused engine and emit one CSV row per
-    scenario; us_per_call is wall time per scan iteration for the whole
+def _experiment_rows(axes, T, algo, name_fn, override=None, **base):
+    """Run each axis combination as a one-scenario Experiment and emit one
+    CSV row; us_per_call is wall time per scan iteration for the whole
     vmapped seed batch (compile cached across calls, warmed first)."""
-    from repro.core.engine import ScenarioGrid, run_grid
-    for axes in grid.scenarios():
-        sub = ScenarioGrid(seeds=grid.seeds,
-                           **{f: (v,) for f, v in zip(
-                               ("K", "n_byz", "attack", "aggregator",
-                                "agreement"), axes)})
-        run_grid(env, sub, T, algo=algo, **kw)      # warm the loop cache
+    import itertools
+
+    from repro.core.engine import Experiment
+    for combo in itertools.product(*axes.values()):
+        exp = Experiment(algo=algo, env=BENCH_ENV, T=T, seeds=SEEDS,
+                         axes={k: (v,) for k, v in zip(axes, combo)},
+                         override=override, **base)
+        exp.run()                                   # warm the loop cache
         t0 = time.perf_counter()
-        res = run_grid(env, sub, T, algo=algo, **kw)
+        res = exp.run(force=True)
         us = (time.perf_counter() - t0) * 1e6 / T
         (scn, out), = res.items()
         _row(name_fn(scn), us,
-             f"seeds={len(grid.seeds)};"
+             f"seeds={len(SEEDS)};"
              f"final_return={out['final_return_mean']:.1f}"
              f"±{out['final_return_ci95']:.1f};"
              f"samples_per_agent={int(out['samples'][:, -1].mean())}")
@@ -63,15 +65,11 @@ def _grid_rows(env, grid, T, algo, name_fn, **kw):
 
 def fig1_speedup():
     import dataclasses as dc
-
-    from repro.core.engine import ScenarioGrid
-    from repro.rl.envs import make_cartpole
-    env = make_cartpole(horizon=100)
-    grid = ScenarioGrid(seeds=SEEDS, K=(1, 5, 13))
-    _grid_rows(env, grid, T_FIG, "decbyzpg",
-               lambda s: f"fig1_decbyzpg_K{s.K}",
-               N=20, B=4, eta=2e-2,
-               override=lambda c: dc.replace(c, kappa=4 if c.K > 1 else 0))
+    _experiment_rows({"K": (1, 5, 13)}, T_FIG, "decbyzpg",
+                     lambda s: f"fig1_decbyzpg_K{s.K}",
+                     N=20, B=4, eta=2e-2,
+                     override=lambda c: dc.replace(
+                         c, kappa=4 if c.K > 1 else 0))
 
 
 # ---------------------------------------------------------------------------
@@ -81,21 +79,18 @@ def fig1_speedup():
 def fig2_attacks():
     import dataclasses as dc
 
-    from repro.core.engine import ScenarioGrid
-    from repro.rl.envs import make_cartpole
-    env = make_cartpole(horizon=100)
     # paper-exact: 3 of 13 agents Byzantine (the largest count tolerated by
     # Assumption 1); aggregator axis "mean" is the naive Dec-PAGE-PG
     # baseline (no agreement), "rfa" is DecByzPG.
-    grid = ScenarioGrid(seeds=SEEDS, K=(13,), n_byz=(3,),
-                        attack=("random_action", "large_noise", "avg_zero"),
-                        aggregator=("rfa", "mean"))
     names = {"rfa": "decbyzpg", "mean": "dec_page_pg"}
-    _grid_rows(env, grid, T_FIG, "decbyzpg",
-               lambda s: f"fig2_{s.attack}_{names[s.aggregator]}",
-               N=20, B=4, eta=2e-2,
-               override=lambda c: dc.replace(
-                   c, kappa=0 if c.aggregator == "mean" else 4))
+    _experiment_rows(
+        {"attack": ("random_action", "large_noise", "avg_zero"),
+         "aggregator": ("rfa", "mean")},
+        T_FIG, "decbyzpg",
+        lambda s: f"fig2_{s.attack}_{names[s.aggregator]}",
+        K=13, n_byz=3, N=20, B=4, eta=2e-2,
+        override=lambda c: dc.replace(
+            c, kappa=0 if c.aggregator.name == "mean" else 4))
 
 
 # ---------------------------------------------------------------------------
@@ -103,16 +98,13 @@ def fig2_attacks():
 # ---------------------------------------------------------------------------
 
 def fig5_byzpg_attacks():
-    from repro.core.engine import ScenarioGrid
-    from repro.rl.envs import make_cartpole
-    env = make_cartpole(horizon=100)
-    grid = ScenarioGrid(seeds=SEEDS, K=(13,), n_byz=(3,),
-                        attack=("large_noise", "avg_zero"),
-                        aggregator=("rfa", "mean"))
     names = {"rfa": "byzpg", "mean": "fed_page_pg"}
-    _grid_rows(env, grid, T_FIG, "byzpg",
-               lambda s: f"fig5_{s.attack}_{names[s.aggregator]}",
-               N=20, B=4, eta=2e-2)
+    _experiment_rows(
+        {"attack": ("large_noise", "avg_zero"),
+         "aggregator": ("rfa", "mean")},
+        T_FIG, "byzpg",
+        lambda s: f"fig5_{s.attack}_{names[s.aggregator]}",
+        K=13, n_byz=3, N=20, B=4, eta=2e-2)
 
 
 # ---------------------------------------------------------------------------
@@ -123,11 +115,13 @@ def bench_engine():
     """The tentpole comparison: one fused lax.scan program (compiled once,
     cached) vs the legacy harness (Python T-loop, jit re-dispatch + host
     sync every iteration, fresh jit per call — the pre-engine execution
-    model) on the fig1 K=13 CartPole config."""
+    model) on the fig1 K=13 CartPole config.  Besides the CSV rows, the
+    numbers are written to ``benchmarks/BENCH_engine.json`` so the perf
+    trajectory stays machine-readable across PRs."""
     from repro.core.decbyzpg import (DecByzPGConfig, run_decbyzpg,
                                      run_decbyzpg_legacy)
-    from repro.rl.envs import make_cartpole
-    env = make_cartpole(horizon=100)
+    from repro.rl.envs import make_env
+    env = make_env(BENCH_ENV)
     cfg = DecByzPGConfig(K=13, N=20, B=4, kappa=4, eta=2e-2, seed=0)
     T = 15
 
@@ -150,6 +144,24 @@ def bench_engine():
     _row("bench_engine_fused_scan", fused_us,
          f"speedup_vs_legacy={legacy_us / fused_us:.1f}x;"
          f"trace_matches_legacy={match}")
+    path = os.path.join(os.path.dirname(__file__), "BENCH_engine.json")
+    with open(path, "w") as f:
+        json.dump({
+            "bench": "engine",
+            "backend": jax.default_backend(),
+            "env": BENCH_ENV,
+            "T": T,
+            "config": {"K": cfg.K, "N": cfg.N, "B": cfg.B,
+                       "kappa": cfg.kappa, "eta": cfg.eta,
+                       "aggregator": cfg.aggregator.canonical(),
+                       "agreement": cfg.agreement.canonical()},
+            "legacy_us_per_iter": legacy_us,
+            "fused_cold_us_per_iter": fused_cold_us,
+            "fused_us_per_iter": fused_us,
+            "speedup_vs_legacy": legacy_us / fused_us,
+            "trace_matches_legacy": bool(match),
+        }, f, indent=2)
+    print(f"# wrote {path}", flush=True)
 
 
 # ---------------------------------------------------------------------------

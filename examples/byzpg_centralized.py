@@ -1,7 +1,7 @@
 """Centralized ByzPG (paper Algorithm 1 / Figs. 5-6): the warm-up method —
 trusted server, robust aggregation of worker PG estimates, PAGE small-batch
-steps at the server only.  Both arms run as one fused-engine ScenarioGrid
-call with the seed batch vmapped.
+steps at the server only.  Both arms run as one declarative Experiment with
+the aggregator axis swept and the seed batch vmapped.
 
   PYTHONPATH=src python examples/byzpg_centralized.py [--iters 30]
 """
@@ -10,8 +10,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core.engine import Scenario, ScenarioGrid, run_grid
-from repro.rl.envs import make_cartpole
+from repro.core.engine import Experiment
 
 
 def main():
@@ -20,12 +19,13 @@ def main():
     ap.add_argument("--attack", default="large_noise")
     ap.add_argument("--seeds", type=int, default=3)
     args = ap.parse_args()
-    env = make_cartpole(horizon=200)
-    grid = ScenarioGrid(seeds=tuple(range(args.seeds)), K=(13,), n_byz=(3,),
-                        attack=(args.attack,), aggregator=("rfa", "mean"))
-    res = run_grid(env, grid, args.iters, algo="byzpg", N=20, B=4, eta=2e-2)
-    robust = res[Scenario(13, 3, args.attack, "rfa", "mda")]
-    naive = res[Scenario(13, 3, args.attack, "mean", "mda")]
+    exp = Experiment(algo="byzpg", env="cartpole(horizon=200)",
+                     T=args.iters, seeds=args.seeds,
+                     axes={"aggregator": ("rfa", "mean")},
+                     K=13, n_byz=3, attack=args.attack, N=20, B=4, eta=2e-2)
+    res = exp.run()
+    robust = res.sel(aggregator="rfa")
+    naive = res.sel(aggregator="mean")
     print(f"attack={args.attack}, 3/13 Byzantine (centralized, "
           f"{args.seeds} seeds)")
     print(f"ByzPG (RFA):        final return "

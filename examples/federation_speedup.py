@@ -1,7 +1,7 @@
 """Paper Fig. 1: speed-up of DecByzPG with federation size K (honest case).
 
-One ScenarioGrid call over the K axis through the fused engine, seeds
-vmapped; K=1 recovers PAGE-PG.
+One declarative Experiment over the K axis through the fused engine,
+seeds vmapped; K=1 recovers PAGE-PG.
 
   PYTHONPATH=src python examples/federation_speedup.py [--iters 30]
 """
@@ -13,8 +13,7 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core.engine import ScenarioGrid, run_grid
-from repro.rl.envs import make_cartpole
+from repro.core.engine import Experiment
 
 
 def main():
@@ -22,14 +21,14 @@ def main():
     ap.add_argument("--iters", type=int, default=30)
     ap.add_argument("--seeds", type=int, default=3)
     args = ap.parse_args()
-    env = make_cartpole(horizon=200)
     print(f"== DecByzPG speed-up in K (alpha=0, {args.seeds} seeds); "
           f"K=1 is PAGE-PG ==")
-    res = run_grid(env, ScenarioGrid(seeds=tuple(range(args.seeds)),
-                                     K=(1, 5, 13)),
-                   args.iters, algo="decbyzpg", N=20, B=4, eta=2e-2,
-                   override=lambda c: dataclasses.replace(
-                       c, kappa=4 if c.K > 1 else 0))
+    exp = Experiment(algo="decbyzpg", env="cartpole(horizon=200)",
+                     T=args.iters, seeds=args.seeds,
+                     axes={"K": (1, 5, 13)}, N=20, B=4, eta=2e-2,
+                     override=lambda c: dataclasses.replace(
+                         c, kappa=4 if c.K > 1 else 0))
+    res = exp.run()
     curves = {scn.K: out for scn, out in res.items()}
     for K, out in curves.items():
         print(f"K={K:2d}: final return {out['final_return_mean']:6.1f}"

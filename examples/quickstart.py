@@ -2,9 +2,10 @@
 
 13 agents, 3 Byzantine running the AvgZero attack; DecByzPG (bucketed RFA
 aggregation + GDA averaging agreement) vs the naive Dec-PAGE-PG baseline.
-Both arms run through the fused experiment engine as one ScenarioGrid
-call: the aggregator axis is vmapped over ``--seeds`` seeds and each
-T-iteration loop is a single compiled scan program.
+One declarative Experiment sweeps the aggregator axis: each arm is a
+single compiled scan program with the seed batch vmapped, and any
+``--attack`` value may be a parameterized component spec, e.g.
+``--attack "large_noise(sigma=10)"``.
 
   PYTHONPATH=src python examples/quickstart.py [--iters 40] [--seeds 3]
 """
@@ -14,8 +15,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core.engine import Scenario, ScenarioGrid, run_grid
-from repro.rl.envs import make_cartpole
+from repro.core.engine import Experiment
 
 
 def main():
@@ -25,17 +25,17 @@ def main():
     ap.add_argument("--seeds", type=int, default=3)
     args = ap.parse_args()
 
-    env = make_cartpole(horizon=200)
-    grid = ScenarioGrid(seeds=tuple(range(args.seeds)), K=(13,), n_byz=(3,),
-                        attack=(args.attack,), aggregator=("rfa", "mean"))
+    exp = Experiment(
+        algo="decbyzpg", env="cartpole(horizon=200)", T=args.iters,
+        seeds=args.seeds, axes={"aggregator": ("rfa", "mean")},
+        K=13, n_byz=3, attack=args.attack, N=20, B=4, eta=2e-2,
+        override=lambda c: dataclasses.replace(
+            c, kappa=0 if c.aggregator.name == "mean" else 5))
     print(f"== DecByzPG (robust) vs Dec-PAGE-PG (naive), attack="
           f"{args.attack}, 3/13 Byzantine, {args.seeds} seeds ==")
-    res = run_grid(env, grid, args.iters, algo="decbyzpg",
-                   N=20, B=4, eta=2e-2,
-                   override=lambda c: dataclasses.replace(
-                       c, kappa=0 if c.aggregator == "mean" else 5))
-    robust = res[Scenario(13, 3, args.attack, "rfa", "mda")]
-    naive = res[Scenario(13, 3, args.attack, "mean", "mda")]
+    res = exp.run()
+    robust = res.sel(aggregator="rfa")
+    naive = res.sel(aggregator="mean")
 
     print(f"{'samples/agent':>14s} {'DecByzPG':>16s} {'Dec-PAGE-PG':>16s}")
     budget = robust["samples"].mean(axis=0)

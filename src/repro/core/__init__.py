@@ -1,7 +1,46 @@
-from repro.core.aggregators import get_aggregator
-from repro.core.agreement import avg_agree, gda_mean, honest_diameter, mda_mean
-from repro.core.attacks import ATTACKS, get_attack, per_receiver
-from repro.core.byzpg import ByzPGConfig, run_byzpg, run_byzpg_legacy
-from repro.core.decbyzpg import (DecByzPGConfig, run_decbyzpg,
-                                 run_decbyzpg_legacy)
-from repro.core.engine import Scenario, ScenarioGrid, run_grid
+"""Core algorithm layer. Exports resolve lazily (PEP 562) so importing
+any one submodule — e.g. ``repro.core.registry``, which leaf modules like
+``repro.optim.optimizers`` depend on — does not pull in the whole
+algorithm stack and create an import cycle."""
+import importlib
+
+_EXPORTS = {
+    "get_aggregator": "repro.core.aggregators",
+    "avg_agree": "repro.core.agreement",
+    "gda_mean": "repro.core.agreement",
+    "honest_diameter": "repro.core.agreement",
+    "mda_mean": "repro.core.agreement",
+    "get_attack": "repro.core.attacks",
+    "is_env_level": "repro.core.attacks",
+    "per_receiver": "repro.core.attacks",
+    "ByzPGConfig": "repro.core.byzpg",
+    "run_byzpg": "repro.core.byzpg",
+    "run_byzpg_legacy": "repro.core.byzpg",
+    "DecByzPGConfig": "repro.core.decbyzpg",
+    "run_decbyzpg": "repro.core.decbyzpg",
+    "run_decbyzpg_legacy": "repro.core.decbyzpg",
+    "Experiment": "repro.core.engine",
+    "ExperimentResult": "repro.core.engine",
+    "Scenario": "repro.core.engine",
+    "ScenarioGrid": "repro.core.engine",
+    "run_grid": "repro.core.engine",
+    "REGISTRY": "repro.core.registry",
+    "Spec": "repro.core.registry",
+    "SpecError": "repro.core.registry",
+    "register": "repro.core.registry",
+    "resolve": "repro.core.registry",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    module = _EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module 'repro.core' has no attribute "
+                             f"{name!r}")
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return __all__

@@ -18,6 +18,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.registry import Spec, register, resolve
+
 
 def pairwise_sq_dists(x: jnp.ndarray) -> jnp.ndarray:
     """(K, d) -> (K, K) squared euclidean distances (jnp oracle path)."""
@@ -129,40 +131,78 @@ def bucketing(inner: Callable, x, key, bucket_size: int):
 
 
 # ---------------------------------------------------------------------------
-# Factory
+# Registry factories — every factory returns ``agg(x, key) -> (d,)``
 # ---------------------------------------------------------------------------
 
-def get_aggregator(name: str, K: int, n_byz: int,
-                   alpha_max: Optional[float] = None) -> Callable:
-    """Returns ``agg(x, key) -> (d,)``.
+def _lemma3_bucket_size(K: int, n_byz: int, alpha_max: float) -> int:
+    """Bucket size per Lemma 3: ``floor(alpha_max / alpha)`` with
+    ``alpha = n_byz / K`` (bucketing disabled when n_byz == 0)."""
+    if n_byz == 0:
+        return 1
+    return max(1, int(alpha_max / max(n_byz / K, 1e-9)))
 
-    Bucket size per Lemma 3: ``floor(alpha_max / alpha)`` with
-    ``alpha = n_byz / K`` (bucketing disabled when n_byz == 0).
+
+@register("aggregator", "mean")
+def _mean_factory():
+    return lambda x, key=None: mean(x)
+
+
+@register("aggregator", "krum")
+def _krum_factory(K, n_byz, m: int = 1, alpha_max: float = 0.25):
+    bs = _lemma3_bucket_size(K, n_byz, alpha_max)
+    if bs == 1:
+        return lambda x, key=None: krum(x, n_byz=max(n_byz, 1), m=m)
+    inner = functools.partial(krum, n_byz=max(1, -(-K // bs) // 4), m=m)
+    return lambda x, key: bucketing(inner, x, key, bs)
+
+
+@register("aggregator", "rfa")
+def _rfa_factory(K, n_byz, n_iter: int = 32, nu: float = 1e-6,
+                 alpha_max: float = 0.5):
+    bs = _lemma3_bucket_size(K, n_byz, alpha_max)
+    inner = functools.partial(rfa, n_iter=n_iter, nu=nu)
+    if bs == 1:
+        return lambda x, key=None: inner(x)
+    return lambda x, key: bucketing(inner, x, key, bs)
+
+
+@register("aggregator", "cwmed")
+def _cwmed_factory():
+    return lambda x, key=None: coordinate_median(x)
+
+
+@register("aggregator", "centered_clip")
+def _centered_clip_factory(tau: float = 1.0, n_iter: int = 5):
+    return lambda x, key=None: centered_clip(x, tau=tau, n_iter=n_iter)
+
+
+@register("aggregator", "trimmed_mean")
+def _trimmed_mean_factory(n_byz):
+    return lambda x, key=None: trimmed_mean(x, max(n_byz, 1))
+
+
+@register("aggregator", "bucketing")
+def _bucketing_factory(K, n_byz, inner, s: int = 2):
+    """Explicit bucketing with a fixed bucket size ``s`` around any inner
+    aggregator spec, e.g. ``bucketing(inner=rfa(n_iter=64), s=2)``.
+
+    The inner spec is resolved against the bucket means: K becomes the
+    bucket count and n_byz becomes 0 so the inner component doesn't apply
+    Lemma-3 auto-bucketing a second time.
     """
-    alpha = n_byz / K
+    n_buckets = -(-K // s)
+    inner_fn = resolve("aggregator", inner, K=n_buckets, n_byz=0)
+    return lambda x, key: bucketing(inner_fn, x, key, s)
 
-    def bucket_size(amax):
-        if n_byz == 0:
-            return 1
-        return max(1, int(amax / max(alpha, 1e-9)))
 
-    if name == "mean":
-        return lambda x, key=None: mean(x)
-    if name == "krum":
-        bs = bucket_size(alpha_max or 0.25)
-        inner = functools.partial(krum, n_byz=max(1, -(-K // bs) // 4))
-        if bs == 1:
-            return lambda x, key=None: krum(x, n_byz=max(n_byz, 1))
-        return lambda x, key: bucketing(inner, x, key, bs)
-    if name == "rfa":
-        bs = bucket_size(alpha_max or 0.5)
-        if bs == 1:
-            return lambda x, key=None: rfa(x)
-        return lambda x, key: bucketing(rfa, x, key, bs)
-    if name == "cwmed":
-        return lambda x, key=None: coordinate_median(x)
-    if name == "centered_clip":
-        return lambda x, key=None: centered_clip(x)
-    if name == "trimmed_mean":
-        return lambda x, key=None: trimmed_mean(x, max(n_byz, 1))
-    raise KeyError(f"unknown aggregator {name!r}")
+def get_aggregator(name, K: int, n_byz: int,
+                   alpha_max: Optional[float] = None) -> Callable:
+    """Resolve an aggregator spec (name, spec string, or Spec) against the
+    federation shape. Kept as the historical entry point; new code can call
+    ``registry.resolve("aggregator", spec, K=K, n_byz=n_byz)`` directly."""
+    ctx = {"K": K, "n_byz": n_byz}
+    if alpha_max is not None:
+        # context, not a spec kwarg: silently ignored (as historically) by
+        # factories that don't take alpha_max; explicit spec kwargs win
+        ctx["alpha_max"] = alpha_max
+    return resolve("aggregator", Spec.of(name), **ctx)

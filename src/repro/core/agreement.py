@@ -12,13 +12,14 @@ per-receiver inconsistent messages.
 from __future__ import annotations
 
 import itertools
-from typing import Callable, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregators import pairwise_sq_dists
+from repro.core.registry import register, resolve
 
 
 def _subsets(K: int, size: int) -> np.ndarray:
@@ -53,9 +54,27 @@ def gda_mean(received: jnp.ndarray, own: jnp.ndarray,
     return jnp.mean(received[idx], axis=0)
 
 
+class AgreementMethod(NamedTuple):
+    """A resolved agreement selection rule: ``select(received, own, n_keep)
+    -> (d,)`` plus the method's tolerated ``alpha_bar``."""
+    select: Callable
+    alpha_bar: float
+
+
+@register("agreement", "mda")
+def _mda_factory(alpha_bar: float = 0.25):
+    return AgreementMethod(lambda recv, own, n_keep: mda_mean(recv, n_keep),
+                           alpha_bar)
+
+
+@register("agreement", "gda")
+def _gda_factory(alpha_bar: float = 0.2):
+    return AgreementMethod(gda_mean, alpha_bar)
+
+
 def avg_agree(theta: jnp.ndarray, kappa: int, n_byz: int,
               byz_mask: Optional[jnp.ndarray] = None,
-              method: str = "gda",
+              method="gda",
               attack: Optional[Callable] = None,
               key: Optional[jnp.ndarray] = None,
               alpha_bar: Optional[float] = None) -> jnp.ndarray:
@@ -64,14 +83,15 @@ def avg_agree(theta: jnp.ndarray, kappa: int, n_byz: int,
     theta: (K, d) current parameters (honest agents' entries are real; the
     Byzantine entries are ignored — Byzantines send whatever ``attack``
     produces, possibly per-receiver).
+    method: agreement spec — "mda" | "gda" | "gda(alpha_bar=0.25)" | Spec.
     attack: fn(broadcast (K,d), byz_mask, key) -> (K_recv, K_send, d) or
     (K_send, d) messages. None = honest broadcast.
     Returns the (K, d) post-agreement parameters (Byzantine rows carry the
     value an honest agent in that slot would compute; callers mask them).
     """
     K, d = theta.shape
-    alpha_bar = alpha_bar if alpha_bar is not None else (
-        0.25 if method == "mda" else 0.2)
+    m = resolve("agreement", method)
+    alpha_bar = alpha_bar if alpha_bar is not None else m.alpha_bar
     # never forced to include a Byzantine: n_keep <= K - n_byz (agents know
     # the tolerance bound f, as in any BFT protocol). With GDA's
     # alpha_max = 1/5 this is what makes 3-of-13 (alpha ~ 0.23) behave.
@@ -83,16 +103,13 @@ def avg_agree(theta: jnp.ndarray, kappa: int, n_byz: int,
     def one_round(th, k):
         msgs = th[None].repeat(K, axis=0)                # (recv, send, d)
         if attack is not None:
-            m = attack(th, byz_mask, k)
-            msgs = m if m.ndim == 3 else m[None].repeat(K, axis=0)
+            a = attack(th, byz_mask, k)
+            msgs = a if a.ndim == 3 else a[None].repeat(K, axis=0)
             # honest senders always deliver their true value
             msgs = jnp.where(byz_mask[None, :, None], msgs,
                              th[None].repeat(K, axis=0))
-        if method == "mda":
-            new = jax.vmap(lambda recv: mda_mean(recv, n_keep))(msgs)
-        else:
-            new = jax.vmap(lambda recv, own: gda_mean(recv, own, n_keep)
-                           )(msgs, th)
+        new = jax.vmap(lambda recv, own: m.select(recv, own, n_keep)
+                       )(msgs, th)
         return new, None
 
     if key is None:

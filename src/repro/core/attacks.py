@@ -9,8 +9,8 @@ lifts any attack to send independently drawn values to every receiver
 
 ``RandomAction`` is environment-level (a Byzantine agent interacts with its
 environment using uniformly random actions but computes its gradient
-honestly); it is implemented in the algorithm drivers via
-``env_level_attacks``.
+honestly); it registers with ``env_level=True`` metadata and the algorithm
+drivers branch on :func:`is_env_level`.
 """
 from __future__ import annotations
 
@@ -19,6 +19,8 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.registry import REGISTRY, Spec, register, resolve
 
 
 def _apply(byz_fn, honest, byz_mask, key):
@@ -63,24 +65,44 @@ def alie(honest, byz_mask, key, z: float = 1.5):
     return jnp.where(byz_mask[:, None], byz_val[None], honest)
 
 
-ATTACKS = {
-    "none": none_attack,
-    "large_noise": large_noise,
-    "avg_zero": avg_zero,
-    "sign_flip": sign_flip,
-    "alie": alie,
-    # env-level: handled by the driver, message path is honest
-    "random_action": none_attack,
-}
+# -- registry factories ------------------------------------------------------
 
-# attacks that corrupt the agent's environment interaction instead of its
-# messages (paper: RandomAction)
-ENV_LEVEL_ATTACKS = ("random_action",)
+register("attack", "none")(lambda: none_attack)
+register("attack", "avg_zero")(lambda: avg_zero)
 
 
-def get_attack(name: str, **kw) -> Callable:
-    fn = ATTACKS[name]
-    return functools.partial(fn, **kw) if kw else fn
+@register("attack", "large_noise")
+def _large_noise_factory(sigma: float = 100.0):
+    return functools.partial(large_noise, sigma=sigma)
+
+
+@register("attack", "sign_flip")
+def _sign_flip_factory(scale: float = 3.0):
+    return functools.partial(sign_flip, scale=scale)
+
+
+@register("attack", "alie")
+def _alie_factory(z: float = 1.5):
+    return functools.partial(alie, z=z)
+
+
+# env-level: the message path is honest, drivers zero the agent's logits
+register("attack", "random_action", env_level=True)(lambda: none_attack)
+
+
+def is_env_level(spec) -> bool:
+    """True when the attack corrupts environment interaction rather than
+    messages (registry metadata; paper: RandomAction)."""
+    return bool(REGISTRY.meta("attack", spec).get("env_level", False))
+
+
+def get_attack(name, **kw) -> Callable:
+    """Resolve an attack spec (name, spec string, or Spec); extra ``kw``
+    merge into the spec's kwargs (explicit spec kwargs win)."""
+    spec = Spec.of(name)
+    if kw:
+        spec = spec.with_kwargs(**kw)
+    return resolve("attack", spec)
 
 
 def per_receiver(attack: Callable, K: int) -> Callable:

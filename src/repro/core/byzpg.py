@@ -35,30 +35,36 @@ import numpy as np
 from repro.core import attacks as attacks_lib
 from repro.core import engine
 from repro.core.aggregators import get_aggregator
+from repro.core.registry import normalize_spec_fields, register
 from repro.core.tree import ravel
 from repro.optim.optimizers import get_optimizer
 from repro.rl.gradient import grad_estimate, weighted_grad_estimate
 from repro.rl.policy import init_mlp, mlp_sizes, mlp_unraveler
 from repro.rl.rollout import batch_return, sample_batch
 
+_SPEC_FIELDS = ("attack", "aggregator", "estimator", "optimizer")
+
 
 @dataclasses.dataclass(frozen=True)
 class ByzPGConfig:
     K: int = 13
     n_byz: int = 0
-    attack: str = "none"
-    aggregator: str = "rfa"
+    attack: object = "none"         # str | Spec, normalized to Spec
+    aggregator: object = "rfa"
     N: int = 50                 # large batch
     B: int = 4                  # small batch
     p: Optional[float] = None   # switch prob; default B/N
     eta: float = 5e-3
     gamma: float = 0.999
-    estimator: str = "gpomdp"
+    estimator: object = "gpomdp"
     activation: str = "relu"
     hidden: tuple = (16, 16)
-    optimizer: str = "adam"
+    optimizer: object = "adam"
     baseline: float = 0.0
     seed: int = 0
+
+    def __post_init__(self):
+        normalize_spec_fields(self, _SPEC_FIELDS)
 
     @property
     def switch_p(self) -> float:
@@ -80,7 +86,7 @@ def build_byzpg_step(env, cfg: ByzPGConfig):
     """One fixed-shape iteration ``step(carry, (t, key), coin_key)``."""
     unravel, _ = mlp_unraveler(env, cfg.hidden)
     byz_mask = jnp.asarray(np.arange(cfg.K) < cfg.n_byz)
-    env_level = cfg.attack in attacks_lib.ENV_LEVEL_ATTACKS
+    env_level = attacks_lib.is_env_level(cfg.attack)
     attack = attacks_lib.get_attack(cfg.attack)
     agg = get_aggregator(cfg.aggregator, cfg.K, cfg.n_byz)
     opt = _optimizer(cfg)
@@ -189,3 +195,8 @@ def run_byzpg_legacy(env, cfg: ByzPGConfig, T: int, eval_every: int = 1):
     hist = {"vec": carry[0], "returns": np.asarray(rets),
             "coins": np.asarray(coins)}
     return _finalize(cfg, unravel, hist, eval_every)
+
+
+register("algo", "byzpg")(lambda: engine.AlgoDef(
+    ByzPGConfig, build_byzpg_loop, init_byzpg_carry,
+    run_byzpg, run_byzpg_legacy))

@@ -36,19 +36,24 @@ from repro.core import attacks as attacks_lib
 from repro.core import engine
 from repro.core.agreement import avg_agree, honest_diameter
 from repro.core.aggregators import get_aggregator
+from repro.core.registry import normalize_spec_fields, register
 from repro.core.tree import ravel
+from repro.optim.optimizers import get_optimizer
 from repro.rl.gradient import grad_estimate, weighted_grad_estimate
 from repro.rl.policy import init_mlp, mlp_sizes, mlp_unraveler
 from repro.rl.rollout import batch_return, sample_batch
+
+_SPEC_FIELDS = ("attack", "aggregator", "agreement", "estimator",
+                "optimizer")
 
 
 @dataclasses.dataclass(frozen=True)
 class DecByzPGConfig:
     K: int = 13
     n_byz: int = 0
-    attack: str = "none"
-    aggregator: str = "rfa"
-    agreement: str = "mda"      # mda (alpha_max=1/4, exact, K<=16) | gda
+    attack: object = "none"         # str | Spec, normalized to Spec
+    aggregator: object = "rfa"
+    agreement: object = "mda"   # mda (alpha_max=1/4, exact, K<=16) | gda
     kappa: int = 6              # Θ(log NK) agreement rounds
     per_receiver: bool = False  # Byzantines send per-receiver values
     N: int = 50
@@ -56,24 +61,31 @@ class DecByzPGConfig:
     p: Optional[float] = None
     eta: float = 5e-3
     gamma: float = 0.999
-    estimator: str = "gpomdp"
+    estimator: object = "gpomdp"
     activation: str = "relu"
     hidden: tuple = (16, 16)
     baseline: float = 0.0
-    optimizer: str = "adam"     # paper App. D applies Adam to the PAGE
+    optimizer: object = "adam"  # paper App. D applies Adam to the PAGE
     seed: int = 0               # direction; "sgd" = Algorithm 2 line 8
+
+    def __post_init__(self):
+        normalize_spec_fields(self, _SPEC_FIELDS)
 
     @property
     def switch_p(self) -> float:
         return self.p if self.p is not None else self.B / self.N
 
 
+def _optimizer(cfg: DecByzPGConfig):
+    return get_optimizer(cfg.optimizer, cfg.eta)
+
+
 def init_decbyzpg_carry(env, cfg: DecByzPGConfig, k_init):
-    """(θ_0 (K,d) common init, θ_prev, Adam (m, s2, t)) — traceable, so a
-    grid lane can build its own carry under vmap."""
+    """(θ_0 (K,d) common init, θ_prev, per-agent optimizer state) —
+    traceable, so a grid lane can build its own carry under vmap."""
     vec0 = ravel(init_mlp(k_init, mlp_sizes(env, cfg.hidden)))[0]
     theta0 = jnp.tile(vec0, (cfg.K, 1))
-    opt0 = (jnp.zeros_like(theta0), jnp.zeros_like(theta0), jnp.zeros(()))
+    opt0 = jax.vmap(_optimizer(cfg).init)(theta0)
     return theta0, jnp.array(theta0), opt0
 
 
@@ -87,13 +99,13 @@ def build_decbyzpg_step(env, cfg: DecByzPGConfig):
     """
     unravel, _ = mlp_unraveler(env, cfg.hidden)
     byz_mask = jnp.asarray(np.arange(cfg.K) < cfg.n_byz)
-    env_level = cfg.attack in attacks_lib.ENV_LEVEL_ATTACKS
+    env_level = attacks_lib.is_env_level(cfg.attack)
     attack = attacks_lib.get_attack(cfg.attack)
     agr_attack = (attacks_lib.per_receiver(attack, cfg.K)
                   if cfg.per_receiver else attack)
     agg = get_aggregator(cfg.aggregator, cfg.K, cfg.n_byz)
     scales = jnp.where(byz_mask & env_level, 0.0, 1.0)
-    use_adam = cfg.optimizer == "adam"
+    opt = _optimizer(cfg)
 
     M = max(cfg.N, cfg.B)
     idx = jnp.arange(M)
@@ -115,16 +127,8 @@ def build_decbyzpg_step(env, cfg: DecByzPGConfig):
             cfg.estimator, cfg.activation, sample_weights=w_small))[0]
         return g, g_old, jnp.sum(w * batch_return(traj))
 
-    def adam_step(v, m, s2, t):
-        b1, b2, eps = 0.9, 0.999, 1e-8
-        m = b1 * m + (1 - b1) * v
-        s2 = b2 * s2 + (1 - b2) * v * v
-        t = t + 1.0
-        upd = (m / (1 - b1 ** t)) / (jnp.sqrt(s2 / (1 - b2 ** t)) + eps)
-        return upd, m, s2, t
-
     def step(carry, xs, coin_key):
-        theta, theta_prev, opt = carry        # theta: (K, d)
+        theta, theta_prev, opt_state = carry  # theta: (K, d)
         t, key = xs
         coin = engine.page_coin(coin_key, t, cfg.switch_p)
         w = jnp.where(coin, w_large, w_small)
@@ -139,12 +143,7 @@ def build_decbyzpg_step(env, cfg: DecByzPGConfig):
         # per-receiver inconsistency is exercised inside Avg-Agree.
         v = jax.vmap(lambda k: agg(msgs, k))(
             jax.random.split(k_agg, cfg.K))
-        if use_adam:
-            upd, m, s2, tt = adam_step(v, *opt)
-            opt = (m, s2, tt)
-        else:
-            upd = v
-        theta_tilde = theta + cfg.eta * upd
+        theta_tilde, opt_state = jax.vmap(opt.update)(v, opt_state, theta)
         if cfg.kappa > 0:
             theta_new = avg_agree(theta_tilde, cfg.kappa, cfg.n_byz,
                                   byz_mask, cfg.agreement, agr_attack,
@@ -154,7 +153,7 @@ def build_decbyzpg_step(env, cfg: DecByzPGConfig):
         honest_ret = jnp.sum(jnp.where(byz_mask, 0.0, rets)) \
             / jnp.maximum(jnp.sum(~byz_mask), 1)
         diam = honest_diameter(theta_new, ~byz_mask)
-        return (theta_new, theta, opt), (honest_ret, coin, diam)
+        return (theta_new, theta, opt_state), (honest_ret, coin, diam)
 
     return step
 
@@ -227,3 +226,8 @@ def run_decbyzpg_legacy(env, cfg: DecByzPGConfig, T: int):
     hist = {"theta": theta, "returns": np.asarray(rets),
             "coins": np.asarray(coins), "diameter": np.asarray(diams)}
     return _finalize(cfg, unravel, hist)
+
+
+register("algo", "decbyzpg")(lambda: engine.AlgoDef(
+    DecByzPGConfig, build_decbyzpg_loop, init_decbyzpg_carry,
+    run_decbyzpg, run_decbyzpg_legacy))

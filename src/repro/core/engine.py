@@ -13,19 +13,29 @@ histories).  This module supplies the layers above them:
   legacy loops, and grid lanes, so a grid lane for seed *s* replays the
   exact key stream of ``run_*(cfg(seed=s))``;
 * ``ScenarioGrid`` / ``run_grid`` — declare a scenario product over
-  (K, n_byz, attack, aggregator, agreement) and a seed batch; seeds are
-  ``jax.vmap``-ed through the fused loop in one device program per
-  scenario, and results come back as a structured tree with mean ± CI.
+  **any** config fields (``axes={"K": (1, 5), "eta": (1e-3, 5e-3),
+  "attack": ("none", "large_noise(sigma=10)")}``) and a seed batch; seeds
+  are ``jax.vmap``-ed through the fused loop in one device program per
+  scenario, and results come back keyed by a per-grid ``Scenario`` tuple
+  with mean ± CI summaries;
+* ``Experiment`` — the declarative front door
+  (``Experiment(algo=..., env=..., T=..., seeds=..., axes=..., **base)``
+  with ``.run()``, ``.summary()``, ``.to_json()``), built on the component
+  registry (DESIGN.md §4) so every string is a parseable component spec.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
-from typing import Callable, NamedTuple, Optional, Tuple
+import json
+from typing import Callable, Mapping, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.registry import Spec, resolve
 
 # ---------------------------------------------------------------------------
 # Common-Sample coin + canonical key derivation
@@ -89,11 +99,34 @@ def donate_args(*argnums):
 
 
 # ---------------------------------------------------------------------------
-# Scenario grids
+# Algorithm definitions (registry namespace "algo")
+# ---------------------------------------------------------------------------
+
+
+class AlgoDef(NamedTuple):
+    """What the engine needs from an algorithm: its config dataclass, the
+    fused-loop/carry builders, and the single-run entry points. Algorithm
+    modules register one under ``register("algo", name)``."""
+    config_cls: type
+    build_loop: Callable
+    init_carry: Callable
+    run: Callable
+    run_legacy: Callable
+
+
+def _algo(name) -> AlgoDef:
+    return resolve("algo", name)
+
+
+# ---------------------------------------------------------------------------
+# Scenario grids over arbitrary config axes
 # ---------------------------------------------------------------------------
 
 
 class Scenario(NamedTuple):
+    """Legacy five-axis scenario key. Grids with other axes key results by
+    a dynamically built namedtuple (``scenario_key``); namedtuples compare
+    and hash as plain tuples, so positional lookups interoperate."""
     K: int
     n_byz: int
     attack: str
@@ -101,47 +134,85 @@ class Scenario(NamedTuple):
     agreement: str
 
 
+_LEGACY_AXES = ("K", "n_byz", "attack", "aggregator", "agreement")
+_LEGACY_DEFAULTS = {"K": (13,), "n_byz": (0,), "attack": ("none",),
+                    "aggregator": ("rfa",), "agreement": ("mda",)}
+
+
+def scenario_key(names) -> type:
+    """Keyed-tuple class for one grid's axis names. Equality/hashing are
+    tuple-based, so keys from different grids (or plain tuples) with the
+    same values in the same order compare equal."""
+    return collections.namedtuple("Scenario", tuple(names))
+
+
+def _as_axis(values) -> tuple:
+    return values if isinstance(values, tuple) else \
+        tuple(values) if isinstance(values, (list, range)) else (values,)
+
+
 @dataclasses.dataclass(frozen=True)
 class ScenarioGrid:
     """Cartesian scenario axes × a vmapped seed batch.
 
-    Every combination of the five axes becomes one compiled device program
-    (cached per static shape); the ``seeds`` axis is vmapped inside it.
+    Axes sweep **any** config field: ``axes={"eta": (1e-3, 5e-3),
+    "attack": ("none", "large_noise(sigma=10)")}``. The five historical
+    axes remain available as keyword fields; constructing a grid with only
+    those (or with none) reproduces the historical five-axis product with
+    its old defaults. When an ``axes`` mapping is given, it alone defines
+    the sweep unless legacy fields are also set, in which case the five
+    legacy axes (defaults filled) are extended/overridden by ``axes``.
+
+    Every axis combination becomes one compiled device program (cached per
+    static shape); the ``seeds`` axis is vmapped inside it.
     """
     seeds: Tuple[int, ...] = (0, 1, 2)
-    K: Tuple[int, ...] = (13,)
-    n_byz: Tuple[int, ...] = (0,)
-    attack: Tuple[str, ...] = ("none",)
-    aggregator: Tuple[str, ...] = ("rfa",)
-    agreement: Tuple[str, ...] = ("mda",)
+    K: Optional[Tuple[int, ...]] = None
+    n_byz: Optional[Tuple[int, ...]] = None
+    attack: Optional[Tuple] = None
+    aggregator: Optional[Tuple] = None
+    agreement: Optional[Tuple] = None
+    axes: Optional[Mapping] = None
+
+    def resolved_axes(self) -> dict:
+        """Axis name -> tuple of values, in scenario-key order."""
+        legacy = {n: _as_axis(getattr(self, n)) for n in _LEGACY_AXES
+                  if getattr(self, n) is not None}
+        extra = {k: _as_axis(v) for k, v in dict(self.axes or {}).items()}
+        if self.axes is not None and not legacy:
+            return extra
+        return {**_LEGACY_DEFAULTS, **legacy, **extra}
+
+    def explicit_axes(self) -> set:
+        """Axis names the caller actually asked for (vs legacy defaults
+        filled in for the historical five-axis grid shape)."""
+        return ({n for n in _LEGACY_AXES if getattr(self, n) is not None}
+                | set(dict(self.axes or {})))
 
     def scenarios(self):
-        return itertools.product(self.K, self.n_byz, self.attack,
-                                 self.aggregator, self.agreement)
+        """Yield one keyed Scenario tuple per axis combination. For a
+        legacy-style grid this unpacks exactly like the historical
+        ``(K, n_byz, attack, aggregator, agreement)`` 5-tuple; use
+        ``._asdict()`` for the ``{axis: value}`` mapping."""
+        axes = self.resolved_axes()
+        key_cls = scenario_key(axes)
+        for combo in itertools.product(*axes.values()):
+            yield key_cls(*combo)
 
 
-def _algo(name: str):
-    if name == "decbyzpg":
-        from repro.core import decbyzpg as m
-        return m.DecByzPGConfig, m.build_decbyzpg_loop, m.init_decbyzpg_carry
-    if name == "byzpg":
-        from repro.core import byzpg as m
-        return m.ByzPGConfig, m.build_byzpg_loop, m.init_byzpg_carry
-    raise KeyError(f"unknown algorithm {name!r}")
-
-
-def seed_batch_loop(env, cfg, T: int, n_seeds: int, algo: str = "decbyzpg"):
+def seed_batch_loop(env, cfg, T: int, n_seeds: int, algo="decbyzpg"):
     """Compiled ``seeds (S,) int32 -> history dict`` with every per-seed
     run (init + full T-iteration fused loop) vmapped into one program."""
-    _, build_loop, init_carry = _algo(algo)
+    algo = Spec.of(algo)
+    a = _algo(algo)
     key = ("grid", algo, env.name, env.horizon, static_key(cfg), T, n_seeds)
 
     def build():
-        loop = build_loop(env, cfg, T)
+        loop = a.build_loop(env, cfg, T)
 
         def one_seed(seed):
             ks = seed_keys(seed)
-            carry = init_carry(env, cfg, ks.init)
+            carry = a.init_carry(env, cfg, ks.init)
             return loop(*carry, jax.random.split(ks.loop, T), ks.coin)
 
         return jax.jit(jax.vmap(one_seed))
@@ -167,32 +238,224 @@ def summarize(hist: dict, cfg) -> dict:
     return out
 
 
-def run_grid(env, grid: ScenarioGrid, T: int, algo: str = "decbyzpg",
+def _check_override(cfg_before, cfg_after, assign: dict) -> None:
+    """An ``override`` hook may derive non-axis fields from axis values,
+    but must not mutate an axis field itself — the result would silently
+    diverge from the Scenario key it is filed under."""
+    changed = [n for n in assign
+               if getattr(cfg_after, n) != getattr(cfg_before, n)]
+    if changed:
+        raise ValueError(
+            f"override mutated swept axis field(s) {changed}: the config "
+            f"would no longer match its Scenario key {assign}; sweep the "
+            f"desired values as an axis instead")
+
+
+def run_grid(env, grid: ScenarioGrid, T: int, algo="decbyzpg",
              override: Optional[Callable] = None, **base) -> dict:
     """Run every scenario in ``grid`` for ``T`` iterations.
 
     ``base`` sets non-axis config fields (N, B, eta, kappa, ...);
-    ``override(cfg) -> cfg`` applies per-scenario adjustments that are
-    functions of the axis values (e.g. fig2's kappa=0 naive baseline).
-    Returns ``{Scenario: summary dict}`` with per-seed histories plus
-    mean ± 95% CI curves.
+    ``override(cfg) -> cfg`` applies per-scenario adjustments to
+    *non-axis* fields derived from axis values (e.g. fig2's kappa=0 naive
+    baseline) — mutating a swept axis field raises, since the config would
+    silently diverge from its Scenario key. Returns ``{Scenario: summary
+    dict}`` with per-seed histories plus mean ± 95% CI curves, keyed by
+    the grid's keyed tuple over its axis names.
     """
-    cfg_cls, _, _ = _algo(algo)
+    cfg_cls = _algo(algo).config_cls
     fields = {f.name for f in dataclasses.fields(cfg_cls)}
-    unknown = set(base) - fields
+    axes = grid.resolved_axes()
+    # legacy-default axes a config doesn't know (e.g. "agreement" for
+    # ByzPG) stay in the key but are dropped from the config, as the
+    # historical five-axis grid did; explicitly requested axes must exist.
+    unknown = ((set(base) | (set(axes) & grid.explicit_axes()))
+               - fields)
     if unknown:
-        raise TypeError(f"unknown {cfg_cls.__name__} fields: {sorted(unknown)}")
+        raise TypeError(f"unknown {cfg_cls.__name__} fields: "
+                        f"{sorted(unknown)}")
+    overlap = set(base) & set(axes)
+    explicit_overlap = overlap & grid.explicit_axes()
+    if explicit_overlap:
+        raise TypeError(f"fields both swept and fixed: "
+                        f"{sorted(explicit_overlap)}")
+    # base may pin an axis the grid only holds as a legacy default — the
+    # pinned value becomes that axis's single point (and its key value)
+    for n in overlap:
+        axes[n] = (base.pop(n),)
+    key_cls = scenario_key(axes)
     seeds = jnp.asarray(grid.seeds, jnp.int32)
     results = {}
-    for K, n_byz, attack, aggregator, agreement in grid.scenarios():
-        axes = {"K": K, "n_byz": n_byz, "attack": attack,
-                "aggregator": aggregator, "agreement": agreement}
-        cfg = cfg_cls(**{k: v for k, v in {**base, **axes}.items()
-                         if k in fields})
+    for combo in itertools.product(*axes.values()):
+        assign = {k: v for k, v in zip(axes, combo) if k in fields}
+        cfg = cfg_cls(**{**base, **assign})
         if override is not None:
-            cfg = override(cfg)
+            cfg2 = override(cfg)
+            _check_override(cfg, cfg2, assign)
+            cfg = cfg2
         loop = seed_batch_loop(env, cfg, T, len(grid.seeds), algo)
         hist = jax.block_until_ready(loop(seeds))
-        results[Scenario(K, n_byz, attack, aggregator, agreement)] = \
-            summarize(hist, cfg)
+        results[key_cls(*combo)] = summarize(hist, cfg)
     return results
+
+
+# ---------------------------------------------------------------------------
+# Declarative Experiment API
+# ---------------------------------------------------------------------------
+
+
+class ExperimentResult:
+    """Results of one :class:`Experiment` run: a mapping from scenario key
+    (keyed tuple over the experiment's axis names) to summary dict, plus
+    JSON/plaintext reporting."""
+
+    def __init__(self, meta: dict, axes: dict, results: dict):
+        self.meta = meta
+        self.axes = axes
+        self.results = results
+
+    def __getitem__(self, key):
+        return self.results[key]
+
+    def __iter__(self):
+        return iter(self.results)
+
+    def __len__(self):
+        return len(self.results)
+
+    def items(self):
+        return self.results.items()
+
+    def keys(self):
+        return self.results.keys()
+
+    def sel(self, **axes):
+        """The unique scenario matching the given axis values, e.g.
+        ``res.sel(aggregator="rfa")``."""
+        names = set(self.axes)
+        bad = set(axes) - names
+        if bad:
+            raise KeyError(f"{sorted(bad)} are not sweep axes of this "
+                           f"experiment; axes: {sorted(names)}")
+        matches = [s for s in self.results
+                   if all(getattr(s, k) == v for k, v in axes.items())]
+        if len(matches) != 1:
+            raise KeyError(f"{axes} matches {len(matches)} scenarios "
+                           f"(need exactly 1) of {list(self.results)}")
+        return self.results[matches[0]]
+
+    @staticmethod
+    def scenario_name(scn) -> str:
+        if not scn:
+            return "base"
+        return ",".join(f"{k}={v}" for k, v in zip(scn._fields, scn))
+
+    def summary(self) -> dict:
+        """Compact per-scenario statistics keyed by ``"axis=value,..."``."""
+        out = {}
+        for scn, r in self.results.items():
+            out[self.scenario_name(scn)] = {
+                "final_return_mean": r["final_return_mean"],
+                "final_return_ci95": r["final_return_ci95"],
+                "samples_per_agent": float(
+                    np.asarray(r["samples"])[:, -1].mean()),
+            }
+        return out
+
+    def to_json(self, path=None, curves: bool = True):
+        """JSON document (written to ``path`` when given) with experiment
+        metadata and per-scenario summaries; ``curves`` includes the
+        mean ± CI return curves (per-seed parameter arrays are omitted)."""
+        doc = {"experiment": self.meta, "scenarios": []}
+        summ = self.summary()
+        for scn, r in self.results.items():
+            entry = {"scenario": dict(zip(scn._fields, [
+                v.canonical() if isinstance(v, Spec) else v for v in scn])),
+                **summ[self.scenario_name(scn)]}
+            if curves:
+                entry["returns_mean"] = np.asarray(
+                    r["returns_mean"]).tolist()
+                entry["returns_ci95"] = np.asarray(
+                    r["returns_ci95"]).tolist()
+                entry["samples_mean"] = np.asarray(
+                    r["samples"]).mean(axis=0).tolist()
+            doc["scenarios"].append(entry)
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(doc, f, indent=2)
+        return doc
+
+
+class Experiment:
+    """Declarative experiment over the fused engine (DESIGN.md §4).
+
+    ::
+
+        Experiment(algo="decbyzpg", env="cartpole(horizon=100)", T=40,
+                   seeds=4, axes={"eta": (1e-2, 2e-2),
+                                  "attack": ("none",
+                                             "large_noise(sigma=10)")},
+                   K=13, n_byz=3, N=20, B=4).run()
+
+    ``axes`` sweeps any config fields (values are component spec strings,
+    Specs, or plain values); remaining keyword arguments fix base config
+    fields. ``seeds`` is a tuple of seeds or an int (``range(seeds)``);
+    ``env`` is an ``Env`` or an env spec resolved through the registry.
+    ``override(cfg) -> cfg`` derives non-axis fields per scenario and is
+    validated against axis mutation exactly like :func:`run_grid` (it is
+    the same check — ``run()`` executes through ``run_grid``).
+    """
+
+    def __init__(self, algo="decbyzpg", env="cartpole", T: int = 50,
+                 seeds=(0, 1, 2), axes: Optional[Mapping] = None,
+                 override: Optional[Callable] = None, **base):
+        self.algo = Spec.of(algo)
+        self.env_spec = env
+        self.T = int(T)
+        self.seeds = tuple(range(seeds)) if isinstance(seeds, int) \
+            else tuple(seeds)
+        self.axes = {k: _as_axis(v) for k, v in dict(axes or {}).items()}
+        self.override = override
+        self.base = base
+        self._result: Optional[ExperimentResult] = None
+
+    @property
+    def env(self):
+        from repro.rl.envs import make_env
+        return make_env(self.env_spec)
+
+    def run(self, force: bool = False) -> ExperimentResult:
+        """Execute (or return the cached) run. Compiled loops are cached
+        process-wide, so ``run(force=True)`` re-executes without
+        recompiling."""
+        if self._result is not None and not force:
+            return self._result
+        env = self.env
+        grid = ScenarioGrid(seeds=self.seeds, axes=self.axes)
+        results = run_grid(env, grid, self.T, algo=self.algo,
+                           override=self.override, **self.base)
+        meta = {"algo": self.algo.canonical(),
+                "env": (Spec.of(self.env_spec).canonical()
+                        if isinstance(self.env_spec, (str, Spec))
+                        else env.name),
+                "T": self.T, "seeds": list(self.seeds),
+                "axes": {k: [v.canonical() if isinstance(v, Spec) else v
+                             for v in vals]
+                         for k, vals in self.axes.items()},
+                "base": {k: (v.canonical() if isinstance(v, Spec) else
+                             repr(v) if not isinstance(
+                                 v, (int, float, bool, str, type(None)))
+                             else v)
+                         for k, v in self.base.items()},
+                # marker only: the hook itself is code and can't round-trip
+                "override": (getattr(self.override, "__qualname__",
+                                     repr(self.override))
+                             if self.override is not None else None)}
+        self._result = ExperimentResult(meta, self.axes, results)
+        return self._result
+
+    def summary(self) -> dict:
+        return self.run().summary()
+
+    def to_json(self, path=None, curves: bool = True):
+        return self.run().to_json(path, curves=curves)

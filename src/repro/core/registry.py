@@ -1,0 +1,292 @@
+"""Unified component-spec registry (DESIGN.md §4).
+
+Every pluggable component — aggregators, attacks, agreement methods,
+gradient estimators, optimizers, environments, algorithms — is registered
+under a namespace and addressed by a :class:`Spec`: a frozen, hashable
+``(name, sorted kwargs)`` value that parses from strings and round-trips
+to a canonical string::
+
+    Spec.of("krum")                          -> krum
+    Spec.of("krum(m=3)")                     -> krum(m=3)
+    Spec.of("bucketing(s=2, inner=rfa(n_iter=64))").canonical()
+        -> "bucketing(inner=rfa(n_iter=64), s=2)"
+
+Because a Spec is frozen and hashable, config dataclasses can hold Specs
+directly: ``dataclasses.replace``/``engine.static_key`` hashing and the
+compiled-loop cache work unchanged, and two configs built from the string
+and Spec forms of the same component hash equal.
+
+Registration happens in the module that owns the component::
+
+    @register("aggregator", "krum")
+    def _krum(K, n_byz, m=1, alpha_max=0.25): ...
+
+Factories are plain callables; :func:`resolve` calls them with the spec's
+kwargs plus whatever *context* kwargs (``K=...``, ``n_byz=...``,
+``lr=...``) their signature accepts — context the factory doesn't name is
+silently dropped, so one ``resolve`` call site serves factories with
+different needs. Spec kwargs win over context on collision (an explicit
+``trimmed_mean(n_byz=2)`` overrides the config's n_byz). Unknown names
+raise ``KeyError`` listing the namespace's registered components; kwargs
+the factory doesn't accept raise ``TypeError`` before the factory runs.
+
+Namespaces resolve lazily: the first lookup in a namespace imports the
+modules listed in ``_PROVIDERS`` so components self-register without this
+module importing (and circularly depending on) any of them.
+"""
+from __future__ import annotations
+
+import ast
+import importlib
+import inspect
+from typing import Any, Callable, Dict, Optional, Tuple
+
+
+class SpecError(ValueError):
+    """A component spec string failed to parse."""
+
+
+class Spec:
+    """Frozen, hashable component spec: a name plus keyword arguments.
+
+    ``kwargs`` is stored as a key-sorted tuple of ``(key, value)`` pairs so
+    equal specs hash equal regardless of argument order. Values may be
+    numbers, bools, None, strings, tuples, or nested Specs.
+    """
+
+    __slots__ = ("name", "kwargs")
+
+    def __init__(self, name: str, **kwargs):
+        if not name.isidentifier():
+            raise SpecError(f"component name must be an identifier, "
+                            f"got {name!r}")
+        object.__setattr__(self, "name", name)
+        object.__setattr__(self, "kwargs", tuple(
+            sorted((k, _norm_value(v)) for k, v in kwargs.items())))
+
+    def __setattr__(self, *_):
+        raise AttributeError("Spec is immutable")
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def of(cls, value) -> "Spec":
+        """Coerce a Spec | string into a Spec (idempotent)."""
+        if isinstance(value, Spec):
+            return value
+        if isinstance(value, str):
+            return cls.parse(value)
+        raise SpecError(f"cannot make a Spec from {type(value).__name__}: "
+                        f"{value!r}")
+
+    @classmethod
+    def parse(cls, s: str) -> "Spec":
+        """Parse ``"name"`` or ``"name(k=v, ...)"``; nested calls become
+        nested Specs."""
+        try:
+            node = ast.parse(s.strip(), mode="eval").body
+        except SyntaxError as e:
+            raise SpecError(f"invalid spec string {s!r}: {e.msg}") from None
+        return _spec_from_node(node, s)
+
+    def with_kwargs(self, **kwargs) -> "Spec":
+        """New Spec with ``kwargs`` merged in (existing keys kept)."""
+        merged = dict(kwargs)
+        merged.update(dict(self.kwargs))
+        return Spec(self.name, **merged)
+
+    # -- canonical form -----------------------------------------------------
+
+    def canonical(self) -> str:
+        if not self.kwargs:
+            return self.name
+        inner = ", ".join(f"{k}={_fmt_value(v)}" for k, v in self.kwargs)
+        return f"{self.name}({inner})"
+
+    def __str__(self) -> str:
+        return self.canonical()
+
+    def __repr__(self) -> str:
+        return f"Spec({self.canonical()!r})"
+
+    # -- value semantics ----------------------------------------------------
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, Spec):
+            return (self.name, self.kwargs) == (other.name, other.kwargs)
+        return NotImplemented
+
+    def __hash__(self) -> int:
+        return hash((Spec, self.name, self.kwargs))
+
+    def __reduce__(self):
+        return (Spec.parse, (self.canonical(),))
+
+
+def _norm_value(v):
+    if isinstance(v, float) and not (v == v and abs(v) != float("inf")):
+        # repr(inf/nan) does not parse back (ast reads "inf" as a Name), so
+        # the canonical form would not round-trip — reject at construction
+        raise SpecError(f"non-finite spec kwarg value: {v!r}")
+    if isinstance(v, (Spec, bool, int, float, str)) or v is None:
+        return v
+    if isinstance(v, (tuple, list)):
+        return tuple(_norm_value(x) for x in v)
+    raise SpecError(f"unsupported spec kwarg value: {v!r}")
+
+
+def _fmt_value(v) -> str:
+    if isinstance(v, Spec):
+        return v.canonical()
+    if isinstance(v, tuple):
+        inner = ", ".join(_fmt_value(x) for x in v)
+        return f"({inner},)" if len(v) == 1 else f"({inner})"
+    return repr(v)
+
+
+def _spec_from_node(node, src: str) -> Spec:
+    if isinstance(node, ast.Name):
+        return Spec(node.id)
+    if isinstance(node, ast.Call):
+        if not isinstance(node.func, ast.Name):
+            raise SpecError(f"invalid spec string {src!r}: component name "
+                            f"must be a plain identifier")
+        if node.args:
+            raise SpecError(f"invalid spec string {src!r}: only keyword "
+                            f"arguments are allowed")
+        kwargs = {}
+        for kw in node.keywords:
+            if kw.arg is None:
+                raise SpecError(f"invalid spec string {src!r}: ** is not "
+                                f"allowed")
+            kwargs[kw.arg] = _value_from_node(kw.value, src)
+        return Spec(node.func.id, **kwargs)
+    raise SpecError(f"invalid spec string {src!r}")
+
+
+def _value_from_node(node, src: str):
+    if isinstance(node, (ast.Name, ast.Call)):
+        return _spec_from_node(node, src)
+    if isinstance(node, ast.Constant):
+        if isinstance(node.value, (bool, int, float, str)) \
+                or node.value is None:
+            return node.value
+        raise SpecError(f"invalid spec string {src!r}: unsupported constant "
+                        f"{node.value!r}")
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(_value_from_node(e, src) for e in node.elts)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub) \
+            and isinstance(node.operand, ast.Constant) \
+            and isinstance(node.operand.value, (int, float)):
+        return -node.operand.value
+    raise SpecError(f"invalid spec string {src!r}: unsupported value "
+                    f"expression")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+# namespace -> modules whose import registers that namespace's built-ins
+_PROVIDERS: Dict[str, Tuple[str, ...]] = {
+    "aggregator": ("repro.core.aggregators",),
+    "attack": ("repro.core.attacks",),
+    "agreement": ("repro.core.agreement",),
+    "estimator": ("repro.rl.gradient",),
+    "optimizer": ("repro.optim.optimizers",),
+    "env": ("repro.rl.envs",),
+    "algo": ("repro.core.decbyzpg", "repro.core.byzpg"),
+    "fed_aggregator": ("repro.distributed.aggregation",),
+    "fed_attack": ("repro.distributed.aggregation",),
+}
+
+
+class Registry:
+    """Namespaced component registry mapping ``(namespace, name)`` to a
+    factory callable plus metadata."""
+
+    def __init__(self):
+        self._factories: Dict[Tuple[str, str], Callable] = {}
+        self._meta: Dict[Tuple[str, str], dict] = {}
+        self._loaded: set = set()
+
+    def register(self, namespace: str, name: Optional[str] = None, **meta):
+        """Decorator: ``@register("aggregator", "krum", **meta)``. The
+        factory's ``__name__`` (minus leading underscores) is used when
+        ``name`` is omitted."""
+
+        def deco(factory):
+            key = (namespace, name or factory.__name__.lstrip("_"))
+            self._factories[key] = factory
+            self._meta[key] = meta
+            return factory
+
+        return deco
+
+    def _ensure_loaded(self, namespace: str) -> None:
+        if namespace in self._loaded:
+            return
+        for mod in _PROVIDERS.get(namespace, ()):
+            importlib.import_module(mod)
+        # only after every provider imported cleanly — a failed import must
+        # surface again on the next lookup, not decay into "unknown name"
+        self._loaded.add(namespace)
+
+    def names(self, namespace: str) -> Tuple[str, ...]:
+        self._ensure_loaded(namespace)
+        return tuple(sorted(n for ns, n in self._factories
+                            if ns == namespace))
+
+    def meta(self, namespace: str, spec) -> dict:
+        name = Spec.of(spec).name
+        self._factory(namespace, name)          # raises on unknown
+        return self._meta[(namespace, name)]
+
+    def _factory(self, namespace: str, name: str) -> Callable:
+        self._ensure_loaded(namespace)
+        try:
+            return self._factories[(namespace, name)]
+        except KeyError:
+            known = ", ".join(self.names(namespace)) or "<none>"
+            raise KeyError(f"unknown {namespace} component {name!r}; "
+                           f"registered: {known}") from None
+
+    def resolve(self, namespace: str, spec, **context) -> Any:
+        """Build the component named by ``spec`` (Spec or string).
+
+        ``context`` carries call-site structure (K, n_byz, lr, ...); only
+        the entries the factory's signature names are passed through, and
+        explicit spec kwargs take precedence over context.
+        """
+        spec = Spec.of(spec)
+        factory = self._factory(namespace, spec.name)
+        params = inspect.signature(factory).parameters
+        var_kw = any(p.kind is inspect.Parameter.VAR_KEYWORD
+                     for p in params.values())
+        accepted = {n for n, p in params.items()
+                    if p.kind in (inspect.Parameter.POSITIONAL_OR_KEYWORD,
+                                  inspect.Parameter.KEYWORD_ONLY)}
+        kwargs = dict(spec.kwargs)
+        if not var_kw:
+            bad = set(kwargs) - accepted
+            if bad:
+                raise TypeError(
+                    f"{namespace}/{spec.name} got unexpected kwarg(s) "
+                    f"{sorted(bad)}; accepted: {sorted(accepted)}")
+        for k, v in context.items():
+            if k in accepted or var_kw:
+                kwargs.setdefault(k, v)
+        return factory(**kwargs)
+
+
+REGISTRY = Registry()
+register = REGISTRY.register
+resolve = REGISTRY.resolve
+
+
+def normalize_spec_fields(cfg, fields) -> None:
+    """Shared ``__post_init__`` body for frozen config dataclasses:
+    coerce each named str|Spec field to a Spec, so the string and Spec
+    forms of a config compare and hash equal."""
+    for f in fields:
+        object.__setattr__(cfg, f, Spec.of(getattr(cfg, f)))

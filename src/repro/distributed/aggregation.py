@@ -18,6 +18,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.registry import Spec, register, resolve
+
 
 # ---------------------------------------------------------------------------
 # Stacked-tree linear algebra
@@ -178,12 +180,20 @@ def agg_trimmed_mean(tree, n_byz: int, key=None):
     return _broadcast_rows(jax.tree.map(f, tree), K)
 
 
-AGGREGATORS = {"mean": agg_mean, "krum": agg_krum, "rfa": agg_rfa,
-               "trimmed_mean": agg_trimmed_mean}
+register("fed_aggregator", "mean")(lambda: agg_mean)
+register("fed_aggregator", "krum")(lambda: agg_krum)
+register("fed_aggregator", "trimmed_mean")(lambda: agg_trimmed_mean)
 
 
-def aggregate(name: str, tree, n_byz: int, key=None):
-    return AGGREGATORS[name](tree, n_byz=n_byz, key=key)
+@register("fed_aggregator", "rfa")
+def _fed_rfa_factory(n_iter: int = 8, nu: float = 1e-6):
+    return functools.partial(agg_rfa, n_iter=n_iter, nu=nu)
+
+
+def aggregate(name, tree, n_byz: int, key=None):
+    """Resolve a stacked-tree aggregator spec (name, spec string like
+    ``"rfa(n_iter=16)"``, or Spec) and apply it."""
+    return resolve("fed_aggregator", name)(tree, n_byz=n_byz, key=key)
 
 
 # ---------------------------------------------------------------------------
@@ -233,34 +243,55 @@ def gda_agree(tree, kappa: int, alpha_bar: float = 0.2,
 # Stacked-tree Byzantine attacks (for examples / resilience tests)
 # ---------------------------------------------------------------------------
 
-def attack_stacked(name: str, tree, byz_mask, key):
-    K = byz_mask.shape[0]
+def _byz_to(byz_mask, l):
+    return byz_mask.reshape(byz_mask.shape + (1,) * (l.ndim - 1))
 
-    def mask_to(l):
-        return byz_mask.reshape((K,) + (1,) * (l.ndim - 1))
 
-    if name == "none" or name is None:
-        return tree
-    if name == "large_noise":
+@register("fed_attack", "none")
+def _fed_none_factory():
+    return lambda tree, byz_mask, key: tree
+
+
+@register("fed_attack", "large_noise")
+def _fed_large_noise_factory(sigma: float = 100.0):
+    def fn(tree, byz_mask, key):
         leaves, treedef = jax.tree.flatten(tree)
         keys = jax.random.split(key, len(leaves))
-        new = [jnp.where(mask_to(l), 100.0 * jax.random.normal(
+        new = [jnp.where(_byz_to(byz_mask, l), sigma * jax.random.normal(
             k, l.shape, l.dtype), l) for l, k in zip(leaves, keys)]
         return jax.tree.unflatten(treedef, new)
-    if name == "avg_zero":
+    return fn
+
+
+@register("fed_attack", "avg_zero")
+def _fed_avg_zero_factory():
+    def fn(tree, byz_mask, key):
         n_byz = jnp.maximum(jnp.sum(byz_mask), 1)
 
         def f(l):
-            m = mask_to(l)
+            m = _byz_to(byz_mask, l)
             hsum = jnp.sum(jnp.where(m, 0.0, l), axis=0)
             return jnp.where(m, (-hsum / n_byz)[None], l)
         return jax.tree.map(f, tree)
-    if name == "sign_flip":
+    return fn
+
+
+@register("fed_attack", "sign_flip")
+def _fed_sign_flip_factory(scale: float = 3.0):
+    def fn(tree, byz_mask, key):
         n_h = jnp.maximum(jnp.sum(~byz_mask), 1)
 
         def f(l):
-            m = mask_to(l)
+            m = _byz_to(byz_mask, l)
             mu = jnp.sum(jnp.where(m, 0.0, l), axis=0) / n_h
-            return jnp.where(m, (-3.0 * mu)[None], l)
+            return jnp.where(m, (-scale * mu)[None], l)
         return jax.tree.map(f, tree)
-    raise KeyError(name)
+    return fn
+
+
+def attack_stacked(name, tree, byz_mask, key):
+    """Resolve a stacked-tree attack spec (name, spec string like
+    ``"large_noise(sigma=10)"``, or Spec) and apply it."""
+    if name is None:
+        return tree
+    return resolve("fed_attack", name)(tree, byz_mask, key)

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.registry import normalize_spec_fields
 from repro.distributed import aggregation as agg_lib
 from repro.distributed.sharding import (batch_spec, fed_axes, n_agents,
                                         param_shardings)
@@ -30,17 +31,20 @@ from repro.optim.optimizers import get_optimizer
 
 @dataclasses.dataclass(frozen=True)
 class FedConfig:
-    aggregator: str = "rfa"
+    aggregator: object = "rfa"       # str | Spec, normalized to Spec
     kappa: int = 4
     alpha_bar: float = 0.2
     n_byz: int = 0
-    attack: str = "none"
+    attack: object = "none"
     lr: float = 1e-4
-    optimizer: str = "adam"
+    optimizer: object = "adam"
     page_p: float = 0.1              # Common-Sample coin probability
     mix_dtype: Optional[str] = None  # None | "bfloat16" (§Perf opt)
     mix_block: int = 0               # stream agreement in K-blocks (§Perf)
     seed: int = 0
+
+    def __post_init__(self):
+        normalize_spec_fields(self, ("aggregator", "attack", "optimizer"))
 
 
 class FedState(NamedTuple):

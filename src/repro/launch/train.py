@@ -48,8 +48,12 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--byz", type=int, default=0)
-    ap.add_argument("--attack", default="none")
-    ap.add_argument("--aggregator", default="rfa")
+    ap.add_argument("--attack", default="none",
+                    help="attack spec, e.g. none | large_noise(sigma=10)")
+    ap.add_argument("--aggregator", default="rfa",
+                    help="aggregator spec, e.g. rfa | rfa(n_iter=16)")
+    ap.add_argument("--optimizer", default="adam",
+                    help="optimizer spec, e.g. adam | sgd(momentum=0.9)")
     ap.add_argument("--kappa", type=int, default=3)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--page-p", type=float, default=0.25)
@@ -64,8 +68,11 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    # CLI strings are component specs; FedConfig normalizes them to frozen
+    # Spec values resolved through the registry inside the train step.
     fed = FedConfig(aggregator=args.aggregator, kappa=args.kappa,
                     n_byz=args.byz, attack=args.attack, lr=args.lr,
+                    optimizer=args.optimizer,
                     page_p=args.page_p, seed=args.seed)
     K = args.agents
     key = jax.random.PRNGKey(args.seed)
@@ -78,8 +85,8 @@ def main() -> None:
         d_model=cfg.d_model, seed=args.seed))
     byz_mask = jnp.asarray(np.arange(K) < args.byz)
 
-    print(f"arch={cfg.name} K={K} byz={args.byz} attack={args.attack} "
-          f"agg={args.aggregator} kappa={args.kappa} "
+    print(f"arch={cfg.name} K={K} byz={args.byz} attack={fed.attack} "
+          f"agg={fed.aggregator} opt={fed.optimizer} kappa={args.kappa} "
           f"mode={'legacy' if args.no_fused else 'fused'}")
     t0 = time.time()
 

@@ -12,6 +12,8 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.registry import Spec, register, resolve
+
 
 class AdamState(NamedTuple):
     step: jnp.ndarray
@@ -82,5 +84,15 @@ def cosine_schedule(base_lr: float, warmup: int, total: int,
     return lr
 
 
-def get_optimizer(name: str, lr, **kw) -> Optimizer:
-    return {"adam": adam, "sgd": sgd}[name](lr, **kw)
+register("optimizer", "adam")(adam)
+register("optimizer", "sgd")(sgd)
+
+
+def get_optimizer(name, lr, **kw) -> Optimizer:
+    """Resolve an optimizer spec (``"adam"``, ``"sgd(momentum=0.9)"``, or a
+    Spec) at learning rate ``lr``; extra ``kw`` (e.g. ``maximize=False``)
+    merge into the spec's kwargs."""
+    spec = Spec.of(name)
+    if kw:
+        spec = spec.with_kwargs(**kw)
+    return resolve("optimizer", spec, lr=lr)

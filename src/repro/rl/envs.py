@@ -14,6 +14,8 @@ from typing import Callable, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.registry import Spec, register, resolve
+
 
 @dataclasses.dataclass(frozen=True)
 class Env:
@@ -102,8 +104,20 @@ def make_lunarlander(horizon: int = 300) -> Env:
     return Env("lunarlander", 6, 4, horizon, reset, step, lambda s: s)
 
 
-_REGISTRY = {"cartpole": make_cartpole, "lunarlander": make_lunarlander}
+register("env", "cartpole")(make_cartpole)
+register("env", "lunarlander")(make_lunarlander)
 
 
-def make_env(name: str, **kw) -> Env:
-    return _REGISTRY[name](**kw)
+def make_env(name, **kw) -> Env:
+    """Build an env from a spec (``"cartpole"``, ``"cartpole(horizon=100)"``,
+    or a Spec); extra ``kw`` merge into the spec's kwargs."""
+    if isinstance(name, Env):
+        if kw:
+            raise TypeError(f"cannot apply overrides {sorted(kw)} to an "
+                            f"already-built Env ({name.name}); pass a "
+                            f"spec instead")
+        return name
+    spec = Spec.of(name)
+    if kw:
+        spec = spec.with_kwargs(**kw)
+    return resolve("env", spec)

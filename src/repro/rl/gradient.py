@@ -7,6 +7,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.registry import register, resolve
 from repro.rl.policy import mlp_logits
 from repro.rl.rollout import Trajectory
 
@@ -35,7 +36,13 @@ def _reinforce_surrogate(params, traj, gamma, baseline, activation):
     return jnp.sum(lp, axis=-1) * jax.lax.stop_gradient(g_return - baseline)
 
 
-_SURROGATES = {"gpomdp": _gpomdp_surrogate, "reinforce": _reinforce_surrogate}
+register("estimator", "gpomdp")(lambda: _gpomdp_surrogate)
+register("estimator", "reinforce")(lambda: _reinforce_surrogate)
+
+
+def _surrogate(estimator):
+    """Resolve an estimator spec (name string or Spec) to its surrogate."""
+    return resolve("estimator", estimator)
 
 
 def grad_estimate(params, traj: Trajectory, gamma: float,
@@ -47,7 +54,7 @@ def grad_estimate(params, traj: Trajectory, gamma: float,
     the fused engine uses it to mask a fixed max(N, B)-shaped batch down to
     the B trajectories a small PAGE step actually consumes.
     """
-    sur = _SURROGATES[estimator]
+    sur = _surrogate(estimator)
 
     def loss(p):
         s = jax.vmap(lambda t: sur(p, t, gamma, baseline, activation)
@@ -81,7 +88,7 @@ def weighted_grad_estimate(params_old, params_new, traj: Trajectory,
     trajectories sampled at θ_new. ``sample_weights`` as in
     :func:`grad_estimate`."""
     w = importance_weights(params_old, params_new, traj, activation)
-    sur = _SURROGATES[estimator]
+    sur = _surrogate(estimator)
 
     def loss(p):
         s = jax.vmap(lambda t: sur(p, t, gamma, baseline, activation))(traj)

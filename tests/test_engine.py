@@ -184,9 +184,9 @@ def test_grid_override_adjusts_config():
     seen = {}
 
     def override(cfg):
-        cfg = dataclasses.replace(cfg,
-                                  kappa=0 if cfg.aggregator == "mean" else 2)
-        seen[cfg.aggregator] = cfg.kappa
+        cfg = dataclasses.replace(
+            cfg, kappa=0 if cfg.aggregator.name == "mean" else 2)
+        seen[cfg.aggregator.name] = cfg.kappa
         return cfg
 
     run_grid(ENV, ScenarioGrid(seeds=(0,), K=(3,), n_byz=(0,),
@@ -194,3 +194,123 @@ def test_grid_override_adjusts_config():
                                agreement=("gda",)),
              T, algo="decbyzpg", override=override, **GRID_KW)
     assert seen == {"rfa": 2, "mean": 0}
+
+
+def test_grid_override_mutating_axis_raises():
+    """An override that rewrites a swept axis field would silently diverge
+    from the Scenario key — it must raise instead."""
+    import pytest
+    with pytest.raises(ValueError, match="aggregator"):
+        run_grid(ENV, ScenarioGrid(seeds=(0,), K=(3,), n_byz=(0,),
+                                   aggregator=("rfa", "mean"),
+                                   agreement=("gda",)),
+                 T, algo="decbyzpg",
+                 override=lambda c: dataclasses.replace(c,
+                                                        aggregator="cwmed"),
+                 **GRID_KW)
+
+
+# ---------------------------------------------------------------------------
+# Arbitrary sweep axes + the declarative Experiment API
+# ---------------------------------------------------------------------------
+
+
+def test_run_grid_arbitrary_axes():
+    """Axes sweep any config field — here eta × a parameterized attack
+    spec — and results key by the grid's own axis tuple."""
+    grid = ScenarioGrid(seeds=(0, 1),
+                        axes={"eta": (1e-2, 5e-3),
+                              "attack": ("none", "large_noise(sigma=10)")})
+    res = run_grid(ENV, grid, T, algo="decbyzpg",
+                   K=3, n_byz=1, N=4, B=2, kappa=2, hidden=(8,))
+    assert len(res) == 4
+    out = res[(1e-2, "large_noise(sigma=10)")]     # tuple-equality lookup
+    assert out["returns"].shape == (2, T)
+    assert np.all(np.isfinite(out["returns"]))
+    n = len(engine._COMPILED)
+    res2 = run_grid(ENV, grid, T, algo="decbyzpg",
+                    K=3, n_byz=1, N=4, B=2, kappa=2, hidden=(8,))
+    assert len(engine._COMPILED) == n              # cache hit on repeat
+    for scn in res:
+        np.testing.assert_array_equal(res[scn]["returns"],
+                                      res2[scn]["returns"])
+
+
+def test_run_grid_unknown_axis_raises():
+    import pytest
+    with pytest.raises(TypeError, match="not_a_field"):
+        run_grid(ENV, ScenarioGrid(seeds=(0,), axes={"not_a_field": (1,)}),
+                 T, algo="decbyzpg", **GRID_KW)
+    with pytest.raises(TypeError, match="swept and fixed"):
+        run_grid(ENV, ScenarioGrid(seeds=(0,), axes={"eta": (1e-2,)}),
+                 T, algo="decbyzpg", eta=2e-2, K=3, N=4, B=2, hidden=(8,))
+
+
+def test_run_grid_base_pins_legacy_default_axis():
+    """A base kwarg naming an axis the grid only holds as a legacy default
+    pins that axis to the base value (and keys it accordingly), instead of
+    the default silently winning."""
+    res = run_grid(ENV, ScenarioGrid(seeds=(0,)), T, algo="decbyzpg",
+                   K=3, N=4, B=2, kappa=1, hidden=(8,))
+    (scn,) = res
+    assert scn.K == 3 and scn.aggregator == "rfa"
+    assert res[scn]["returns"].shape == (1, T)
+
+
+def test_experiment_end_to_end(tmp_path):
+    from repro.core.engine import Experiment
+    exp = Experiment(algo="decbyzpg", env="cartpole(horizon=20)", T=T,
+                     seeds=2,
+                     axes={"aggregator": ("rfa", "mean")},
+                     K=3, n_byz=1, attack="sign_flip", N=4, B=2, kappa=2,
+                     hidden=(8,))
+    res = exp.run()
+    assert len(res) == 2
+    robust = res.sel(aggregator="rfa")
+    assert robust["returns"].shape == (2, T)
+    # run() caches; run(force=True) re-executes identically
+    assert exp.run() is res
+    res2 = exp.run(force=True)
+    np.testing.assert_array_equal(robust["returns"],
+                                  res2.sel(aggregator="rfa")["returns"])
+    # summary + JSON
+    summ = exp.summary()
+    assert set(summ) == {"aggregator=rfa", "aggregator=mean"}
+    path = tmp_path / "exp.json"
+    doc = exp.to_json(path)
+    assert path.exists()
+    assert doc["experiment"]["algo"] == "decbyzpg"
+    assert {d["scenario"]["aggregator"] for d in doc["scenarios"]} == \
+        {"rfa", "mean"}
+    assert all(len(d["returns_mean"]) == T for d in doc["scenarios"])
+
+
+def test_experiment_no_axes_single_scenario():
+    from repro.core.engine import Experiment
+    exp = Experiment(algo="byzpg", env="cartpole(horizon=20)", T=T,
+                     seeds=(0,), K=3, N=4, B=2, hidden=(8,))
+    res = exp.run()
+    assert len(res) == 1
+    (out,) = res.results.values()
+    assert out["returns"].shape == (1, T)
+    assert "base" in exp.summary()
+
+
+def test_experiment_matches_run_grid():
+    """The declarative front door executes through the same grid engine:
+    identical keys and traces for an equivalent legacy-style call."""
+    from repro.core.engine import Experiment
+    legacy = run_grid(ENV, _grid(seeds=(0, 1)), T, algo="decbyzpg",
+                      **GRID_KW)
+    exp = Experiment(algo="decbyzpg", env="cartpole(horizon=20)", T=T,
+                     seeds=(0, 1),
+                     axes={"K": (3,), "n_byz": (1,),
+                           "attack": ("sign_flip", "large_noise"),
+                           "aggregator": ("rfa", "mean"),
+                           "agreement": ("gda",)},
+                     **GRID_KW)
+    res = exp.run()
+    assert set(map(tuple, res.keys())) == set(map(tuple, legacy.keys()))
+    for scn in legacy:
+        np.testing.assert_array_equal(res[tuple(scn)]["returns"],
+                                      legacy[scn]["returns"])

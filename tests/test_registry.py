@@ -1,0 +1,209 @@
+"""Component-spec registry tests (DESIGN.md §4): Spec parsing/formatting
+round-trips, nested specs, error reporting, resolution context plumbing,
+and string-config backward compatibility."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.registry import REGISTRY, Spec, SpecError, resolve
+
+
+# ---------------------------------------------------------------------------
+# Spec parsing / canonical round-trips
+# ---------------------------------------------------------------------------
+
+def test_bare_name_round_trip():
+    s = Spec.parse("krum")
+    assert s.name == "krum" and s.kwargs == ()
+    assert s.canonical() == "krum"
+    assert Spec.parse(s.canonical()) == s
+
+
+def test_kwargs_round_trip_and_ordering():
+    a = Spec.parse("krum(m=3)")
+    assert a.canonical() == "krum(m=3)"
+    # kwargs are stored key-sorted, so argument order doesn't matter
+    x = Spec.parse("rfa(nu=1e-6, n_iter=64)")
+    y = Spec.parse("rfa(n_iter=64, nu=1e-6)")
+    assert x == y and hash(x) == hash(y)
+    assert x.canonical() == y.canonical()
+    assert Spec.parse(x.canonical()) == x
+
+
+def test_nested_spec_round_trip():
+    s = Spec.parse("bucketing(s=2, inner=rfa(n_iter=64))")
+    assert s.canonical() == "bucketing(inner=rfa(n_iter=64), s=2)"
+    assert Spec.parse(s.canonical()) == s
+    inner = dict(s.kwargs)["inner"]
+    assert isinstance(inner, Spec) and inner.name == "rfa"
+    assert dict(inner.kwargs) == {"n_iter": 64}
+
+
+def test_value_types_round_trip():
+    s = Spec("demo", f=1.5, neg=-2, flag=True, none=None, s="x'y",
+             tup=(1, 2))
+    assert Spec.parse(s.canonical()) == s
+
+
+def test_spec_equivalence_constructor_vs_parse():
+    assert Spec.parse("large_noise(sigma=10)") == Spec("large_noise",
+                                                       sigma=10)
+    s = Spec("rfa", n_iter=8)
+    assert Spec.of(s) is s                               # idempotent
+
+
+def test_spec_is_immutable_and_hashable():
+    s = Spec("krum", m=3)
+    with pytest.raises(AttributeError):
+        s.name = "other"
+    assert len({s, Spec("krum", m=3), Spec("krum")}) == 2
+
+
+@pytest.mark.parametrize("bad", [
+    "krum(3)",              # positional args
+    "krum(m=3",             # unbalanced parens
+    "kr um",                # not an identifier
+    "krum(m=[)]",           # garbage
+    "f(**kw)",              # ** not allowed
+])
+def test_bad_spec_strings_raise(bad):
+    with pytest.raises(SpecError):
+        Spec.parse(bad)
+
+
+def test_non_finite_kwargs_rejected():
+    # inf/nan would not round-trip through the canonical string
+    with pytest.raises(SpecError):
+        Spec("f", x=float("inf"))
+    with pytest.raises(SpecError):
+        Spec("f", x=float("nan"))
+
+
+def test_spec_pickle_round_trip():
+    import pickle
+    s = Spec.parse("bucketing(inner=rfa(n_iter=64), s=2)")
+    assert pickle.loads(pickle.dumps(s)) == s
+
+
+# ---------------------------------------------------------------------------
+# Resolution: context plumbing, parameterized + nested components, errors
+# ---------------------------------------------------------------------------
+
+def test_unknown_component_lists_registered_names():
+    with pytest.raises(KeyError, match="rfa"):
+        resolve("aggregator", "definitely_not_registered")
+
+
+def test_bad_kwarg_raises_before_factory_runs():
+    with pytest.raises(TypeError, match="bogus"):
+        resolve("aggregator", "krum(bogus=1)", K=8, n_byz=2)
+
+
+def test_parameterized_and_nested_aggregators_resolve():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 5))
+    key = jax.random.PRNGKey(1)
+    for spec in ("mean", "krum", "krum(m=3)", "rfa(n_iter=8)",
+                 "bucketing(inner=rfa(n_iter=64), s=2)",
+                 "bucketing(inner=krum(m=2), s=2)"):
+        out = resolve("aggregator", spec, K=8, n_byz=2)(x, key)
+        assert out.shape == (5,)
+        assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_spec_kwargs_override_context():
+    # trimmed_mean's n_byz comes from context, but an explicit spec kwarg
+    # wins over it
+    x = jnp.asarray(np.arange(24, dtype=np.float32).reshape(8, 3))
+    explicit = resolve("aggregator", "trimmed_mean(n_byz=3)",
+                       K=8, n_byz=1)(x)
+    # trimming 3 from each end of 8 sorted rows leaves rows 3..4
+    np.testing.assert_allclose(np.asarray(explicit),
+                               np.asarray(x[3:5].mean(axis=0)), atol=1e-6)
+
+
+def test_env_namespace_resolves_with_kwargs():
+    from repro.rl.envs import make_env
+    env = make_env("cartpole(horizon=37)")
+    assert env.name == "cartpole" and env.horizon == 37
+    assert make_env("lunarlander").n_actions == 4
+
+
+def test_attack_env_level_metadata():
+    from repro.core import attacks
+    assert attacks.is_env_level("random_action")
+    assert not attacks.is_env_level("large_noise(sigma=10)")
+    assert not attacks.is_env_level(Spec("avg_zero"))
+
+
+def test_optimizer_and_estimator_namespaces():
+    from repro.optim.optimizers import get_optimizer
+    opt = get_optimizer("sgd(momentum=0.5)", 1e-2)
+    p = jnp.ones((3,))
+    s = opt.init(p)
+    p2, _ = opt.update(jnp.ones((3,)), s, p)
+    np.testing.assert_allclose(np.asarray(p2), 1.01, atol=1e-6)
+    assert resolve("estimator", "gpomdp") is not None
+    assert resolve("agreement", "gda").alpha_bar == 0.2
+    assert resolve("agreement", "gda(alpha_bar=0.25)").alpha_bar == 0.25
+
+
+def test_registry_names_nonempty_per_namespace():
+    for ns in ("aggregator", "attack", "agreement", "estimator",
+               "optimizer", "env", "algo", "fed_aggregator", "fed_attack"):
+        assert REGISTRY.names(ns), ns
+
+
+# ---------------------------------------------------------------------------
+# String-config backward compatibility
+# ---------------------------------------------------------------------------
+
+def test_config_string_and_spec_forms_hash_equal():
+    from repro.core.byzpg import ByzPGConfig
+    from repro.core.decbyzpg import DecByzPGConfig
+    a = DecByzPGConfig(aggregator="rfa", attack="large_noise(sigma=10)")
+    b = DecByzPGConfig(aggregator=Spec("rfa"),
+                       attack=Spec("large_noise", sigma=10))
+    assert a == b and hash(a) == hash(b)
+    assert engine.static_key(a) == engine.static_key(b)
+    assert isinstance(a.aggregator, Spec)
+    c = ByzPGConfig(aggregator="krum(m=2)")
+    d = ByzPGConfig(aggregator=Spec("krum", m=2))
+    assert c == d and hash(c) == hash(d)
+
+
+def test_config_replace_keeps_specs():
+    from repro.core.decbyzpg import DecByzPGConfig
+    cfg = dataclasses.replace(DecByzPGConfig(aggregator="rfa"), seed=3)
+    assert isinstance(cfg.aggregator, Spec) and cfg.aggregator.name == "rfa"
+
+
+def test_fed_config_normalizes_to_specs():
+    from repro.distributed.fed_trainer import FedConfig
+    fed = FedConfig(aggregator="rfa(n_iter=16)",
+                    attack="large_noise(sigma=5)", optimizer="sgd")
+    assert fed.aggregator == Spec("rfa", n_iter=16)
+    assert fed.attack.canonical() == "large_noise(sigma=5)"
+    assert hash(fed) == hash(FedConfig(
+        aggregator=Spec("rfa", n_iter=16),
+        attack=Spec("large_noise", sigma=5), optimizer=Spec("sgd")))
+
+
+def test_run_decbyzpg_accepts_parameterized_specs():
+    """A parameterized spec string resolves through the registry into the
+    fused scan loop, and the compiled-loop cache hits on the repeat."""
+    from repro.core.decbyzpg import DecByzPGConfig, run_decbyzpg
+    from repro.rl.envs import make_env
+    env = make_env("cartpole(horizon=16)")
+    cfg = DecByzPGConfig(K=3, n_byz=1, attack="large_noise(sigma=10)",
+                         aggregator="bucketing(inner=rfa(n_iter=16), s=2)",
+                         agreement="gda(alpha_bar=0.25)", kappa=1,
+                         N=4, B=2, hidden=(8,), seed=0)
+    out = run_decbyzpg(env, cfg, 3)
+    n = len(engine._COMPILED)
+    again = run_decbyzpg(env, cfg, 3)
+    assert len(engine._COMPILED) == n
+    np.testing.assert_array_equal(out["returns"], again["returns"])

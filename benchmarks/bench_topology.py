@@ -1,0 +1,100 @@
+"""Topology benchmark: agreement wall-clock and honest-diameter
+contraction vs. gossip-graph density.
+
+Runs ``avg_agree`` (jitted, per-receiver equivocation attack active) over
+a ladder of topologies at fixed (K, d, kappa) and records per-round
+wall-clock plus the observed Δ₂ contraction factor, alongside each
+graph's static diagnostics (density, max degree, spectral gap, Fiedler
+value). Results go to ``benchmarks/BENCH_topology.json`` so the
+agreement hot path's perf trajectory stays machine-readable across PRs.
+
+  PYTHONPATH=src python -m benchmarks.bench_topology [--smoke]
+
+``--smoke`` shrinks (K, d, repeats) to a seconds-scale run for CI — same
+code path, same JSON schema (flagged ``"smoke": true``).
+"""
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+TOPOLOGIES = ("complete", "ring(k=2)", "ring(k=4)", "torus",
+              "small_world(k=4, beta=0.3)", "erdos_renyi(p=0.4, seed=0)",
+              "star")
+
+
+def run(K: int = 16, d: int = 20_000, kappa: int = 4, n_byz: int = 3,
+        repeats: int = 5, smoke: bool = False) -> dict:
+    from repro.core import attacks as attacks_lib
+    from repro.core.agreement import avg_agree, honest_diameter
+    from repro.topology import resolve_topology
+
+    key = jax.random.PRNGKey(0)
+    theta = jax.random.normal(key, (K, d))
+    byz_mask = jnp.asarray(np.arange(K) < n_byz)
+    hmask = ~byz_mask
+    attack = attacks_lib.per_receiver(
+        attacks_lib.get_attack("large_noise", sigma=50.0), K)
+    d0 = float(honest_diameter(theta, hmask))
+
+    rows = []
+    print("name,us_per_round,derived", flush=True)
+    for spec in TOPOLOGIES:
+        topo = resolve_topology(spec, K)
+        fn = jax.jit(lambda th, k, t=topo: avg_agree(
+            th, kappa, n_byz, byz_mask, "gda", attack, k, topology=t))
+        out = jax.block_until_ready(fn(theta, key))      # compile
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out = fn(theta, key)
+        jax.block_until_ready(out)
+        us_round = (time.perf_counter() - t0) / repeats / kappa * 1e6
+        dk = float(honest_diameter(out, hmask))
+        contraction = dk / d0 if d0 > 0 else 0.0
+        rows.append({
+            "topology": topo.name,
+            "density": topo.density,
+            "deg_max": topo.deg_max,
+            "min_in_degree": topo.min_in_degree,
+            "spectral_gap": topo.spectral_gap,
+            "algebraic_connectivity": topo.algebraic_connectivity,
+            "tolerates_n_byz": topo.tolerates(n_byz),
+            "us_per_round": us_round,
+            "diameter_contraction": contraction,
+        })
+        print(f"topology_{topo.spec.name},{us_round:.1f},"
+              f"density={topo.density:.2f};contraction={contraction:.3f};"
+              f"deg_max={topo.deg_max}", flush=True)
+
+    doc = {"bench": "topology", "backend": jax.default_backend(),
+           "smoke": smoke, "K": K, "d": d, "kappa": kappa, "n_byz": n_byz,
+           "method": "gda", "attack": "per_receiver large_noise(sigma=50)",
+           "initial_diameter": d0, "rows": rows}
+    # smoke runs get their own file so a CI-sized run can't silently
+    # replace the tracked full-ladder baseline
+    name = "BENCH_topology_smoke.json" if smoke else "BENCH_topology.json"
+    path = os.path.join(os.path.dirname(__file__), name)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"# wrote {path}", flush=True)
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI run (small K/d, fewer repeats)")
+    args = ap.parse_args()
+    if args.smoke:
+        run(K=8, d=512, kappa=3, n_byz=1, repeats=2, smoke=True)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

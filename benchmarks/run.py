@@ -168,6 +168,14 @@ def bench_engine():
 # Micro: robust aggregators at LLM-gradient scale
 # ---------------------------------------------------------------------------
 
+def bench_topology():
+    """Agreement wall-clock + Δ₂ contraction vs gossip-graph density;
+    writes ``benchmarks/BENCH_topology.json`` (full ladder lives in
+    ``benchmarks/bench_topology.py``, which also has a ``--smoke`` CLI)."""
+    from benchmarks.bench_topology import run as run_topology
+    run_topology()
+
+
 def bench_aggregators():
     from repro.core.aggregators import get_aggregator
     K, d, n_byz = 13, 200_000, 3
@@ -295,6 +303,7 @@ ALL = {
     "bench_engine": bench_engine,
     "bench_aggregators": bench_aggregators,
     "bench_agreement": bench_agreement,
+    "bench_topology": bench_topology,
     "bench_kernels": bench_kernels,
     "bench_fed_step": bench_fed_step,
     "ablation_kappa_aggregator": ablation_kappa_aggregator,

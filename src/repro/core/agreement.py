@@ -1,13 +1,25 @@
-"""Averaging agreement (paper Def. 3, App. A.3): MDA and GDA.
+"""Averaging agreement (paper Def. 3, App. A.3): MDA and GDA over
+arbitrary gossip graphs.
 
-``Avg-Agree_κ`` runs κ rounds of all-to-all broadcast; each agent selects a
+``Avg-Agree_κ`` runs κ rounds of message passing; each agent selects a
 large low-diameter subset of what it received and averages it. MDA (exact
-minimum-diameter subset, exponential in K — used for K<=16) tolerates
-α_max = 1/4; GDA (greedy: the ⌈(1-ᾱ)K⌉ closest to the agent's own vector,
-O(K)) tolerates α_max = 1/5 and is the production path.
+minimum-diameter subset, exponential in the neighborhood size — capped at
+:data:`MDA_MAX_AGENTS`) tolerates α_max = 1/4; GDA (greedy: the
+⌈(1-ᾱ)·deg⌉ closest to the agent's own vector, O(deg)) tolerates
+α_max = 1/5 and is the production path.
 
-The simulator below models the full Byzantine adversary including
-per-receiver inconsistent messages.
+The paper's Algorithm 3 is the complete-graph case. The core here
+generalizes it to any static directed topology (DESIGN.md §5): round ``r``
+delivers messages only along edges, Byzantine senders may equivocate
+per-receiver-edge, and selection runs over the padded fixed-shape
+neighbor gather ``(K, deg_max, d)`` so everything vmaps/jits. On the
+complete graph the gather table is ``arange(K)`` per row, making the
+masked core *identical* to the historical all-to-all broadcast — same
+ops, same PRNG stream, same numerics.
+
+The simulator models the full Byzantine adversary including per-receiver
+inconsistent messages (a ``(K_recv, K_send, d)`` attack tensor): each
+receiver observes its own adversarial version only along its in-edges.
 """
 from __future__ import annotations
 
@@ -19,7 +31,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregators import pairwise_sq_dists
-from repro.core.registry import register, resolve
+from repro.core.registry import REGISTRY, Spec, register, resolve
+from repro.topology import Topology, resolve_topology
+
+#: Largest neighbor-multiset size ``mda_mean`` will enumerate subsets for.
+#: C(n, n_keep) subsets materialize as a trace-time constant — beyond this
+#: the enumeration blows up combinatorially. Note the limit applies to the
+#: *neighborhood*, not K: MDA on a sparse graph (ring(k=4) has deg 5)
+#: stays usable at federation sizes where the complete graph cannot.
+MDA_MAX_AGENTS = 16
 
 
 def _subsets(K: int, size: int) -> np.ndarray:
@@ -30,12 +50,20 @@ def _subsets(K: int, size: int) -> np.ndarray:
 
 
 def mda_mean(received: jnp.ndarray, n_keep: int) -> jnp.ndarray:
-    """Exact Minimum-Diameter Averaging: received (K, d) -> (d,).
+    """Exact Minimum-Diameter Averaging: received (n, d) -> (d,).
 
-    Enumerates subsets (static at trace time) — exponential in K, per the
-    paper usable only for small K; tests use K <= 16.
+    Enumerates subsets (static at trace time) — exponential in n, per the
+    paper usable only for small multisets; raises beyond
+    :data:`MDA_MAX_AGENTS` instead of silently materializing C(n, n_keep)
+    subset tables.
     """
     K = received.shape[0]
+    if K > MDA_MAX_AGENTS:
+        raise ValueError(
+            f"mda_mean enumerates C(n, n_keep) subsets at trace time and "
+            f"received a multiset of size {K} > MDA_MAX_AGENTS="
+            f"{MDA_MAX_AGENTS}; use method='gda' or a sparser topology "
+            f"(the limit applies to the neighborhood size, not K)")
     subs = jnp.asarray(_subsets(K, n_keep))              # (n_sub, n_keep)
     d2 = pairwise_sq_dists(received)
     # diameter of each subset = max pairwise distance within it
@@ -48,7 +76,7 @@ def mda_mean(received: jnp.ndarray, n_keep: int) -> jnp.ndarray:
 def gda_mean(received: jnp.ndarray, own: jnp.ndarray,
              n_keep: int) -> jnp.ndarray:
     """Greedy Diameter Averaging: mean of the n_keep vectors closest to the
-    agent's own vector. O(K) selection."""
+    agent's own vector. O(n) selection."""
     d2 = jnp.sum((received - own[None]) ** 2, axis=1)
     _, idx = jax.lax.top_k(-d2, n_keep)
     return jnp.mean(received[idx], axis=0)
@@ -61,7 +89,7 @@ class AgreementMethod(NamedTuple):
     alpha_bar: float
 
 
-@register("agreement", "mda")
+@register("agreement", "mda", max_agents=MDA_MAX_AGENTS)
 def _mda_factory(alpha_bar: float = 0.25):
     return AgreementMethod(lambda recv, own, n_keep: mda_mean(recv, n_keep),
                            alpha_bar)
@@ -77,43 +105,73 @@ def avg_agree(theta: jnp.ndarray, kappa: int, n_byz: int,
               method="gda",
               attack: Optional[Callable] = None,
               key: Optional[jnp.ndarray] = None,
-              alpha_bar: Optional[float] = None) -> jnp.ndarray:
-    """Simulate Avg-Agree_κ over K agents (paper Algorithm 3).
+              alpha_bar: Optional[float] = None,
+              topology=None) -> jnp.ndarray:
+    """Simulate Avg-Agree_κ over K agents (paper Algorithm 3, generalized
+    to gossip graphs).
 
     theta: (K, d) current parameters (honest agents' entries are real; the
     Byzantine entries are ignored — Byzantines send whatever ``attack``
     produces, possibly per-receiver).
     method: agreement spec — "mda" | "gda" | "gda(alpha_bar=0.25)" | Spec.
     attack: fn(broadcast (K,d), byz_mask, key) -> (K_recv, K_send, d) or
-    (K_send, d) messages. None = honest broadcast.
+    (K_send, d) messages. None = honest broadcast. An active attack
+    requires an explicit ``key`` — there is no silent PRNGKey(0) fallback
+    (it would make attacks deterministic and identical across calls).
+    topology: None (complete broadcast) | spec string/Spec | resolved
+    :class:`~repro.topology.Topology`. Messages travel only along the
+    graph's edges; selection runs over the padded fixed-shape neighbor
+    gather, so low-degree agents see extra copies of their own value.
     Returns the (K, d) post-agreement parameters (Byzantine rows carry the
     value an honest agent in that slot would compute; callers mask them).
     """
     K, d = theta.shape
     m = resolve("agreement", method)
+    topo = resolve_topology(topology, K)
+    nbr = jnp.asarray(topo.nbr_idx)                      # (K, P)
+    P = topo.deg_max
     alpha_bar = alpha_bar if alpha_bar is not None else m.alpha_bar
-    # never forced to include a Byzantine: n_keep <= K - n_byz (agents know
+    # never forced to include a Byzantine: n_keep <= P - n_byz (agents know
     # the tolerance bound f, as in any BFT protocol). With GDA's
     # alpha_max = 1/5 this is what makes 3-of-13 (alpha ~ 0.23) behave.
-    n_keep = min(int(np.ceil((1.0 - alpha_bar) * K)), K - n_byz)
+    n_keep = min(int(np.ceil((1.0 - alpha_bar) * P)), P - n_byz)
     n_keep = max(n_keep, 1)
+    limit = REGISTRY.meta("agreement", method).get("max_agents")
+    if limit is not None and P > limit:
+        raise ValueError(
+            f"agreement method {Spec.of(method).name!r} supports neighbor "
+            f"multisets up to {limit}, but topology {topo.name!r} has "
+            f"deg_max={P}; use 'gda' or a sparser topology")
     if byz_mask is None:
         byz_mask = jnp.zeros((K,), bool)
+    if key is None:
+        if attack is not None:
+            raise ValueError(
+                "avg_agree: an active attack requires an explicit PRNG "
+                "`key` (thread one from the caller's key stream); the old "
+                "silent key=None -> PRNGKey(0) fallback made attacks "
+                "deterministic and identical across calls")
+        key = jax.random.PRNGKey(0)          # honest rounds draw nothing
+    rows = jnp.arange(K)[:, None]
 
     def one_round(th, k):
-        msgs = th[None].repeat(K, axis=0)                # (recv, send, d)
-        if attack is not None:
+        if attack is None:
+            recv = th[nbr]                               # (K, P, d)
+        else:
             a = attack(th, byz_mask, k)
-            msgs = a if a.ndim == 3 else a[None].repeat(K, axis=0)
-            # honest senders always deliver their true value
-            msgs = jnp.where(byz_mask[None, :, None], msgs,
-                             th[None].repeat(K, axis=0))
-        new = jax.vmap(lambda recv, own: m.select(recv, own, n_keep)
-                       )(msgs, th)
+            if a.ndim == 3:
+                # per-receiver-edge equivocation: receiver r observes its
+                # own adversarial slice a[r] along its in-edges only;
+                # honest senders always deliver their true value
+                recv = jnp.where(byz_mask[nbr][:, :, None],
+                                 a[rows, nbr], th[nbr])
+            else:
+                sent = jnp.where(byz_mask[:, None], a, th)
+                recv = sent[nbr]
+        new = jax.vmap(lambda rv, own: m.select(rv, own, n_keep)
+                       )(recv, th)
         return new, None
 
-    if key is None:
-        key = jax.random.PRNGKey(0)
     theta, _ = jax.lax.scan(one_round, theta, jax.random.split(key, kappa))
     return theta
 

@@ -42,9 +42,10 @@ from repro.optim.optimizers import get_optimizer
 from repro.rl.gradient import grad_estimate, weighted_grad_estimate
 from repro.rl.policy import init_mlp, mlp_sizes, mlp_unraveler
 from repro.rl.rollout import batch_return, sample_batch
+from repro.topology import resolve_topology
 
 _SPEC_FIELDS = ("attack", "aggregator", "agreement", "estimator",
-                "optimizer")
+                "optimizer", "topology")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +57,9 @@ class DecByzPGConfig:
     agreement: object = "mda"   # mda (alpha_max=1/4, exact, K<=16) | gda
     kappa: int = 6              # Θ(log NK) agreement rounds
     per_receiver: bool = False  # Byzantines send per-receiver values
+    topology: object = "complete"   # gossip graph spec (DESIGN.md §5):
+    # complete | ring(k=) | torus | erdos_renyi(p=, seed=) |
+    # small_world(k=, beta=, seed=) | star — static, part of static_key
     N: int = 50
     B: int = 4
     p: Optional[float] = None
@@ -106,6 +110,7 @@ def build_decbyzpg_step(env, cfg: DecByzPGConfig):
     agg = get_aggregator(cfg.aggregator, cfg.K, cfg.n_byz)
     scales = jnp.where(byz_mask & env_level, 0.0, 1.0)
     opt = _optimizer(cfg)
+    topo = resolve_topology(cfg.topology, cfg.K)
 
     M = max(cfg.N, cfg.B)
     idx = jnp.arange(M)
@@ -147,7 +152,7 @@ def build_decbyzpg_step(env, cfg: DecByzPGConfig):
         if cfg.kappa > 0:
             theta_new = avg_agree(theta_tilde, cfg.kappa, cfg.n_byz,
                                   byz_mask, cfg.agreement, agr_attack,
-                                  k_agr)
+                                  k_agr, topology=topo)
         else:
             theta_new = theta_tilde
         honest_ret = jnp.sum(jnp.where(byz_mask, 0.0, rets)) \

@@ -235,6 +235,11 @@ def summarize(hist: dict, cfg) -> dict:
     out["final_return_mean"] = float(final.mean())
     out["final_return_ci95"] = float(
         1.96 * final.std(ddof=1) / np.sqrt(S)) if S > 1 else 0.0
+    if "diameter" in out:
+        # the paper's Δ₂ agreement diagnostic, reported alongside returns
+        diam = out["diameter"]
+        out["diameter_mean"] = diam.mean(axis=0)
+        out["final_diameter_mean"] = float(diam[:, -1].mean())
     return out
 
 
@@ -354,12 +359,16 @@ class ExperimentResult:
         """Compact per-scenario statistics keyed by ``"axis=value,..."``."""
         out = {}
         for scn, r in self.results.items():
-            out[self.scenario_name(scn)] = {
+            entry = {
                 "final_return_mean": r["final_return_mean"],
                 "final_return_ci95": r["final_return_ci95"],
                 "samples_per_agent": float(
                     np.asarray(r["samples"])[:, -1].mean()),
             }
+            # Δ₂ diagnostic; absent for algos without agreement (ByzPG)
+            if "final_diameter_mean" in r:
+                entry["honest_diameter_final"] = r["final_diameter_mean"]
+            out[self.scenario_name(scn)] = entry
         return out
 
     def to_json(self, path=None, curves: bool = True):

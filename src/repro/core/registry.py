@@ -195,6 +195,7 @@ _PROVIDERS: Dict[str, Tuple[str, ...]] = {
     "estimator": ("repro.rl.gradient",),
     "optimizer": ("repro.optim.optimizers",),
     "env": ("repro.rl.envs",),
+    "topology": ("repro.topology.graphs",),
     "algo": ("repro.core.decbyzpg", "repro.core.byzpg"),
     "fed_aggregator": ("repro.distributed.aggregation",),
     "fed_attack": ("repro.distributed.aggregation",),

@@ -1,0 +1,6 @@
+"""Communication-topology subsystem: gossip graphs for decentralized
+agreement (DESIGN.md §5)."""
+from repro.topology.graphs import (Topology, make_topology,
+                                   resolve_topology)
+
+__all__ = ["Topology", "make_topology", "resolve_topology"]

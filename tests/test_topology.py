@@ -1,0 +1,308 @@
+"""Communication-topology subsystem tests (DESIGN.md §5): generators,
+diagnostics, masked agreement equivalence-to-broadcast, sparse
+contraction, config/engine wiring."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attacks as attacks_lib
+from repro.core import engine
+from repro.core.agreement import MDA_MAX_AGENTS, avg_agree, honest_diameter
+from repro.core.decbyzpg import (DecByzPGConfig, run_decbyzpg,
+                                 run_decbyzpg_legacy)
+from repro.core.registry import REGISTRY
+from repro.rl.envs import make_cartpole
+from repro.topology import Topology, make_topology, resolve_topology
+
+
+# ---------------------------------------------------------------------------
+# Generators + diagnostics
+# ---------------------------------------------------------------------------
+
+
+def test_complete_topology_identity_gather():
+    t = resolve_topology("complete", 7)
+    assert t.adjacency.all()
+    assert t.deg_max == 7 and t.min_in_degree == 6
+    # the padded gather table is the identity permutation per receiver —
+    # the property that makes the masked core reproduce the broadcast
+    np.testing.assert_array_equal(t.nbr_idx,
+                                  np.tile(np.arange(7), (7, 1)))
+    assert t.is_complete() and t.density == 1.0
+    assert t.spectral_gap == pytest.approx(1.0)
+
+
+def test_ring_structure_and_padding():
+    t = resolve_topology("ring(k=4)", 10)
+    assert t.deg_max == 5                    # 4 neighbors + self
+    assert t.min_in_degree == 4
+    assert np.array_equal(t.adjacency, t.adjacency.T)
+    np.testing.assert_array_equal(np.diag(t.adjacency), True)
+    # receiver 0 hears {8, 9, 0, 1, 2}
+    assert set(t.nbr_idx[0]) == {8, 9, 0, 1, 2}
+    assert t.algebraic_connectivity > 0      # connected
+    with pytest.raises(ValueError, match="even"):
+        resolve_topology("ring(k=3)", 10)
+
+
+def test_ring_saturates_to_complete():
+    assert resolve_topology("ring(k=8)", 6).is_complete()
+
+
+def test_torus_degrees():
+    t = resolve_topology("torus", 9)         # 3x3
+    assert (t.in_degree == 5).all()          # 4-neighborhood + self
+    assert np.array_equal(t.adjacency, t.adjacency.T)
+    with pytest.raises(ValueError, match="divide"):
+        resolve_topology("torus(rows=4)", 9)
+
+
+def test_star_structure():
+    t = resolve_topology("star", 6)
+    assert t.min_in_degree == 1
+    assert t.deg_max == 6                    # hub hears everyone
+    assert not t.tolerates(1)                # connectivity 1 < 2f+1
+    assert t.adjacency[0].all() and t.adjacency[:, 0].all()
+
+
+def test_erdos_renyi_deterministic_per_seed():
+    a = resolve_topology("erdos_renyi(p=0.4, seed=3)", 12)
+    b = resolve_topology("erdos_renyi(p=0.4, seed=3)", 12)
+    c = resolve_topology("erdos_renyi(p=0.4, seed=4)", 12)
+    np.testing.assert_array_equal(a.adjacency, b.adjacency)
+    assert not np.array_equal(a.adjacency, c.adjacency)
+    assert a is b                            # resolution cache hit
+    # p=0 keeps only self-loops: disconnected, Fiedler value 0
+    empty = resolve_topology("erdos_renyi(p=0)", 5)
+    assert empty.min_in_degree == 0
+    assert empty.algebraic_connectivity == pytest.approx(0.0)
+
+
+def test_small_world_keeps_degree_even_spread():
+    t = resolve_topology("small_world(k=4, beta=0.3, seed=1)", 16)
+    assert np.array_equal(t.adjacency, t.adjacency.T)
+    # a node always keeps its own k/2 rightward edges, and each rewire
+    # moves exactly one edge endpoint, so degree >= k/2 and the total
+    # edge count is preserved
+    assert t.min_in_degree >= 2
+    assert (t.in_degree - 1).sum() == 16 * 4
+
+
+def test_make_topology_forces_self_loops_and_validates():
+    adj = np.zeros((4, 4), bool)
+    t = make_topology("custom", adj)
+    np.testing.assert_array_equal(np.diag(t.adjacency), True)
+    with pytest.raises(ValueError, match="square"):
+        make_topology("bad", np.zeros((3, 4), bool))
+    with pytest.raises(ValueError, match="K=5"):
+        resolve_topology(t, 5)               # K mismatch
+
+
+# ---------------------------------------------------------------------------
+# Masked agreement core
+# ---------------------------------------------------------------------------
+
+
+def _per_receiver_noise(K, sigma=50.0):
+    return attacks_lib.per_receiver(
+        attacks_lib.get_attack("large_noise", sigma=sigma), K)
+
+
+def _broadcast_avg_agree_reference(theta, kappa, n_byz, byz_mask, method,
+                                   attack, key):
+    """The pre-topology all-to-all core, inlined verbatim as a golden
+    reference: dense (K, K, d) message tensor, no gather. An independent
+    pin for the equivalence-to-broadcast invariant — a regression in the
+    masked core's complete-graph numerics fails here even though both
+    ``topology=None`` and ``topology='complete'`` share one code path."""
+    from repro.core.registry import resolve
+    K, d = theta.shape
+    m = resolve("agreement", method)
+    n_keep = max(min(int(np.ceil((1.0 - m.alpha_bar) * K)), K - n_byz), 1)
+
+    def one_round(th, k):
+        msgs = th[None].repeat(K, axis=0)                # (recv, send, d)
+        if attack is not None:
+            a = attack(th, byz_mask, k)
+            msgs = a if a.ndim == 3 else a[None].repeat(K, axis=0)
+            msgs = jnp.where(byz_mask[None, :, None], msgs,
+                             th[None].repeat(K, axis=0))
+        new = jax.vmap(lambda recv, own: m.select(recv, own, n_keep)
+                       )(msgs, th)
+        return new, None
+
+    out, _ = jax.lax.scan(one_round, theta, jax.random.split(key, kappa))
+    return out
+
+
+@pytest.mark.parametrize("method", ["gda", "mda"])
+def test_complete_topology_reproduces_broadcast_exactly(method):
+    """Equivalence-to-broadcast invariant (acceptance criterion): the
+    masked core on the complete graph replays the historical broadcast
+    implementation — same PRNG stream, equal output — for honest,
+    consistent-attack, and per-receiver-equivocation rounds."""
+    K, d, n_byz = 8, 5, 2
+    key = jax.random.PRNGKey(0)
+    theta = jax.random.normal(key, (K, d))
+    byz_mask = jnp.asarray(np.arange(K) < n_byz)
+    for attack in (None, attacks_lib.get_attack("avg_zero"),
+                   _per_receiver_noise(K)):
+        k = key if attack is not None else None
+        want = _broadcast_avg_agree_reference(
+            theta, 3, n_byz, byz_mask, method, attack,
+            jax.random.PRNGKey(0) if k is None else k)
+        for topology in (None, "complete"):
+            got = avg_agree(theta, 3, n_byz, byz_mask, method, attack, k,
+                            topology=topology)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=0, rtol=0)
+
+
+@pytest.mark.parametrize("spec", ["ring(k=4)", "torus",
+                                  "small_world(k=4, beta=0.3, seed=0)"])
+@pytest.mark.parametrize("method", ["gda", "mda"])
+def test_sparse_agreement_contracts(spec, method):
+    """κ gossip rounds shrink the honest diameter on sparse graphs, under
+    per-receiver Byzantine equivocation."""
+    K, d, n_byz = 9, 4, 1
+    key = jax.random.PRNGKey(2)
+    theta = jax.random.normal(key, (K, d))
+    byz_mask = jnp.asarray(np.arange(K) < n_byz)
+    hmask = ~byz_mask
+    d0 = float(honest_diameter(theta, hmask))
+    out = avg_agree(theta, 6, n_byz, byz_mask, method,
+                    _per_receiver_noise(K), key, topology=spec)
+    dk = float(honest_diameter(out, hmask))
+    assert dk < 0.5 * d0, (spec, method, dk, d0)
+    # honest outputs stay within the (slightly inflated) honest hull
+    lo = jnp.min(theta[n_byz:], axis=0) - 0.3 * d0
+    hi = jnp.max(theta[n_byz:], axis=0) + 0.3 * d0
+    assert bool(jnp.all((out[n_byz:] >= lo) & (out[n_byz:] <= hi)))
+
+
+def test_mda_sparse_beyond_complete_limit():
+    """MDA's subset blowup is bounded by the neighborhood, not K: a sparse
+    graph keeps MDA usable where the complete graph raises."""
+    K = MDA_MAX_AGENTS + 4
+    theta = jax.random.normal(jax.random.PRNGKey(0), (K, 3))
+    out = avg_agree(theta, 2, 0, method="mda", topology="ring(k=4)")
+    assert np.isfinite(np.asarray(out)).all()
+    # avg_agree pre-checks via the factory's registry metadata...
+    with pytest.raises(ValueError, match="neighbor multisets up to 16"):
+        avg_agree(theta, 2, 0, method="mda")
+    # ...and mda_mean itself guards direct callers
+    from repro.core.agreement import mda_mean
+    with pytest.raises(ValueError, match="MDA_MAX_AGENTS"):
+        mda_mean(theta, n_keep=K - 2)
+    assert REGISTRY.meta("agreement", "mda")["max_agents"] == \
+        MDA_MAX_AGENTS
+
+
+def test_attack_requires_explicit_key():
+    theta = jax.random.normal(jax.random.PRNGKey(0), (6, 3))
+    with pytest.raises(ValueError, match="explicit PRNG"):
+        avg_agree(theta, 2, 1, jnp.asarray(np.arange(6) < 1),
+                  "gda", attacks_lib.get_attack("large_noise"))
+    # honest rounds still work keyless
+    out = avg_agree(theta, 2, 0, method="gda")
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_per_edge_equivocation_differs_from_consistent_attack():
+    """Per-receiver equivocation must actually deliver different values
+    along different edges: outcomes differ from the consistent attack."""
+    K, n_byz = 8, 2
+    key = jax.random.PRNGKey(5)
+    theta = jax.random.normal(key, (K, 4))
+    byz_mask = jnp.asarray(np.arange(K) < n_byz)
+    consistent = attacks_lib.get_attack("large_noise", sigma=5.0)
+    out_c = avg_agree(theta, 1, n_byz, byz_mask, "gda", consistent, key,
+                      topology="ring(k=4)")
+    out_e = avg_agree(theta, 1, n_byz, byz_mask, "gda",
+                      attacks_lib.per_receiver(consistent, K), key,
+                      topology="ring(k=4)")
+    assert not np.allclose(np.asarray(out_c), np.asarray(out_e))
+
+
+# ---------------------------------------------------------------------------
+# Config / engine wiring
+# ---------------------------------------------------------------------------
+
+ENV = make_cartpole(horizon=20)
+T = 5
+BASE = dict(K=6, n_byz=1, attack="sign_flip", aggregator="rfa",
+            agreement="gda", kappa=2, N=4, B=2, eta=1e-2, hidden=(8,),
+            seed=3)
+
+
+def test_fused_matches_legacy_on_sparse_topology():
+    """The scan-vs-dispatch equivalence invariant extends to gossip
+    graphs (masked gather inside the fused scan)."""
+    cfg = DecByzPGConfig(per_receiver=True, topology="ring(k=4)", **BASE)
+    fused = run_decbyzpg(ENV, cfg, T)
+    legacy = run_decbyzpg_legacy(ENV, cfg, T)
+    np.testing.assert_allclose(fused["returns"], legacy["returns"],
+                               atol=1e-5)
+    np.testing.assert_allclose(fused["theta"], legacy["theta"], atol=1e-6)
+    np.testing.assert_allclose(fused["diameter"], legacy["diameter"],
+                               atol=1e-6)
+
+
+def test_default_config_is_complete_and_static_key_stable():
+    """topology participates in static_key: the default and explicit
+    complete configs share one compiled loop; a sparse spec gets its
+    own."""
+    c_default = DecByzPGConfig(**BASE)
+    c_complete = DecByzPGConfig(topology="complete", **BASE)
+    c_ring = DecByzPGConfig(topology="ring(k=4)", **BASE)
+    assert c_default == c_complete
+    assert engine.static_key(c_default) == engine.static_key(c_complete)
+    assert engine.static_key(c_default) != engine.static_key(c_ring)
+    r1 = run_decbyzpg(ENV, c_default, T)
+    n = len(engine._COMPILED)
+    r2 = run_decbyzpg(ENV, c_complete, T)    # cache hit
+    assert len(engine._COMPILED) == n
+    np.testing.assert_array_equal(np.asarray(r1["theta"]),
+                                  np.asarray(r2["theta"]))
+
+
+def test_topology_axis_sweep_end_to_end(tmp_path):
+    """Acceptance criterion: Experiment sweeps a topology axis, reports
+    Δ₂ alongside returns, and round-trips through JSON."""
+    from repro.core.engine import Experiment
+    specs = ("complete", "ring(k=4)")
+    exp = Experiment(algo="decbyzpg", env="cartpole(horizon=20)", T=T,
+                     seeds=2, axes={"topology": specs},
+                     K=6, n_byz=1, attack="avg_zero", per_receiver=True,
+                     aggregator="rfa", agreement="gda", kappa=2,
+                     N=4, B=2, hidden=(8,))
+    res = exp.run()
+    assert len(res) == 2
+    for spec in specs:
+        out = res.sel(topology=spec)
+        assert out["returns"].shape == (2, T)
+        assert out["diameter"].shape == (2, T)
+        assert np.isfinite(out["final_diameter_mean"])
+    summ = exp.summary()
+    assert all("honest_diameter_final" in v for v in summ.values())
+    path = tmp_path / "topo.json"
+    doc = exp.to_json(path)
+    assert path.exists()
+    assert {d["scenario"]["topology"] for d in doc["scenarios"]} == \
+        set(specs)
+    assert all("honest_diameter_final" in d for d in doc["scenarios"])
+
+
+def test_grid_override_cannot_mutate_topology_axis():
+    from repro.core.engine import ScenarioGrid, run_grid
+    with pytest.raises(ValueError, match="topology"):
+        run_grid(ENV, ScenarioGrid(seeds=(0,),
+                                   axes={"topology": ("complete",
+                                                      "ring(k=4)")}),
+                 T, algo="decbyzpg",
+                 override=lambda c: dataclasses.replace(c,
+                                                        topology="star"),
+                 K=6, N=4, B=2, kappa=1, hidden=(8,))

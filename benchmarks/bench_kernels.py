@@ -1,0 +1,100 @@
+"""Kernel-suite benchmark: us/call for every dispatched kernel.
+
+Times each kernel in the ``kernel`` registry namespace over a ladder of
+(K agents, deg_max P, param-dim D) shapes, on the jnp-oracle backend and
+on the Pallas backend (compiled on TPU; the interpreter elsewhere — off
+TPU the Pallas numbers measure the interpreter, not the kernel, and are
+recorded so interpret-mode blowups in CI stay visible). Results go to
+``benchmarks/BENCH_kernels.json``; ``--smoke`` shrinks the ladder to a
+seconds-scale run and writes the untracked
+``BENCH_kernels_smoke.json`` (same schema, ``"smoke": true``) that
+``benchmarks/check_regress.py`` gates CI with.
+
+  PYTHONPATH=src python -m benchmarks.bench_kernels [--smoke]
+"""
+import argparse
+import json
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.timing import min_time_s
+
+# full ladder; the first entry is the smoke shape, so smoke rows always
+# have a matching key in the committed full-ladder baseline
+SIZES = ((8, 4, 512), (8, 4, 4096), (16, 8, 4096), (16, 8, 32768))
+#: interpret-mode runs above this D are skipped off-TPU (the interpreter
+#: is minutes-slow at model scale; the skip is printed, not silent)
+INTERPRET_MAX_D = 4096
+
+
+def _cases(K, P, D, key):
+    """kernel name -> (args, kwargs) at this ladder point."""
+    x = jax.random.normal(key, (K, D))
+    nbr = np.stack([np.sort((np.arange(P) + r) % K) for r in range(K)])
+    recv = jax.random.normal(key, (K, P, D))
+    # static kernel parameters ride in the kwargs closure (they are jit
+    # static args of the Pallas wrappers); only arrays are jit operands
+    return {
+        "pairwise_dist": ((x,), {}),
+        "trimmed_mean": ((x,), {"n_trim": 1}),
+        "krum_score": ((x,), {"n_near": max(K - 3, 1)}),
+        "rfa": ((x,), {"n_iter": 16}),
+        "gossip_reduce": ((x, jnp.asarray(nbr)),
+                          {"mode": "trimmed", "n_trim": 1}),
+        "neighbor_reduce": ((recv,), {"mode": "median"}),
+    }
+
+
+def run(sizes=SIZES, repeats: int = 20, smoke: bool = False) -> dict:
+    from repro.kernels import dispatch
+
+    pallas_backend = "pallas" if dispatch.on_tpu() else "pallas-interpret"
+    key = jax.random.PRNGKey(0)
+    rows = []
+    print("kernel,backend,K,P,D,us_per_call", flush=True)
+    for K, P, D in sizes:
+        for name, (args, kw) in _cases(K, P, D, key).items():
+            kernel = dispatch.get_kernel(name)
+            for backend in ("jnp", pallas_backend):
+                if backend == "pallas-interpret" and D > INTERPRET_MAX_D:
+                    print(f"# skip {name}/{backend} at D={D} "
+                          f"(> INTERPRET_MAX_D={INTERPRET_MAX_D})",
+                          flush=True)
+                    continue
+                fn = jax.jit(lambda *a, _k=kernel.impl(backend), _kw=kw:
+                             _k(*a, **_kw))
+                us = min_time_s(fn, *args, repeats=repeats) * 1e6
+                rows.append({"kernel": name, "backend": backend,
+                             "K": K, "P": P, "D": D, "us_per_call": us})
+                print(f"{name},{backend},{K},{P},{D},{us:.1f}", flush=True)
+    doc = {"bench": "kernels", "backend": jax.default_backend(),
+           "smoke": smoke, "repeats": repeats, "rows": rows}
+    # smoke runs get their own (untracked) file so a CI-sized run can't
+    # silently replace the tracked full-ladder baseline
+    name = "BENCH_kernels_smoke.json" if smoke else "BENCH_kernels.json"
+    path = os.path.join(os.path.dirname(__file__), name)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"# wrote {path}", flush=True)
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI run (smallest ladder point only)")
+    args = ap.parse_args()
+    if args.smoke:
+        # two smallest ladder points: the D=4096 entries are the ones fat
+        # enough (>min-us) for check_regress to actually gate
+        run(sizes=SIZES[:2], repeats=30, smoke=True)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

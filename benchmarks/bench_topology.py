@@ -2,34 +2,42 @@
 contraction vs. gossip-graph density.
 
 Runs ``avg_agree`` (jitted, per-receiver equivocation attack active) over
-a ladder of topologies at fixed (K, d, kappa) and records per-round
-wall-clock plus the observed Δ₂ contraction factor, alongside each
-graph's static diagnostics (density, max degree, spectral gap, Fiedler
-value). Results go to ``benchmarks/BENCH_topology.json`` so the
-agreement hot path's perf trajectory stays machine-readable across PRs.
+a ladder of topologies at each (K, d, kappa) ladder point and records
+per-round wall-clock (min over repeats — scheduler noise only adds time)
+plus the observed Δ₂ contraction factor, alongside each graph's static
+diagnostics (density, max degree, spectral gap, Fiedler value). Results
+go to ``benchmarks/BENCH_topology.json`` so the agreement hot path's
+perf trajectory stays machine-readable across PRs.
 
   PYTHONPATH=src python -m benchmarks.bench_topology [--smoke]
 
-``--smoke`` shrinks (K, d, repeats) to a seconds-scale run for CI — same
-code path, same JSON schema (flagged ``"smoke": true``).
+``--smoke`` runs only the smallest ladder point with fewer repeats — the
+same code path and JSON schema (flagged ``"smoke": true``), written to
+the untracked ``BENCH_topology_smoke.json``. Every row carries its own
+(K, d, kappa, n_byz), and the full baseline includes the smoke-sized
+point, so ``check_regress.py`` can match smoke rows against the
+committed baseline by key.
 """
 import argparse
 import json
 import os
-import time
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from benchmarks.timing import min_time_s
+
 TOPOLOGIES = ("complete", "ring(k=2)", "ring(k=4)", "torus",
               "small_world(k=4, beta=0.3)", "erdos_renyi(p=0.4, seed=0)",
               "star")
 
+# (K, d, kappa, n_byz) ladder; the first entry is the smoke point
+SIZES = ((8, 512, 3, 1), (16, 20_000, 4, 3))
 
-def run(K: int = 16, d: int = 20_000, kappa: int = 4, n_byz: int = 3,
-        repeats: int = 5, smoke: bool = False) -> dict:
+
+def measure(K: int, d: int, kappa: int, n_byz: int, repeats: int) -> list:
     from repro.core import attacks as attacks_lib
     from repro.core.agreement import avg_agree, honest_diameter
     from repro.topology import resolve_topology
@@ -43,38 +51,45 @@ def run(K: int = 16, d: int = 20_000, kappa: int = 4, n_byz: int = 3,
     d0 = float(honest_diameter(theta, hmask))
 
     rows = []
-    print("name,us_per_round,derived", flush=True)
     for spec in TOPOLOGIES:
         topo = resolve_topology(spec, K)
         fn = jax.jit(lambda th, k, t=topo: avg_agree(
             th, kappa, n_byz, byz_mask, "gda", attack, k, topology=t))
-        out = jax.block_until_ready(fn(theta, key))      # compile
-        t0 = time.perf_counter()
-        for _ in range(repeats):
-            out = fn(theta, key)
-        jax.block_until_ready(out)
-        us_round = (time.perf_counter() - t0) / repeats / kappa * 1e6
+        us_round = min_time_s(fn, theta, key, repeats=repeats) / kappa * 1e6
+        out = fn(theta, key)
         dk = float(honest_diameter(out, hmask))
         contraction = dk / d0 if d0 > 0 else 0.0
         rows.append({
             "topology": topo.name,
+            "K": K, "d": d, "kappa": kappa, "n_byz": n_byz,
             "density": topo.density,
             "deg_max": topo.deg_max,
             "min_in_degree": topo.min_in_degree,
             "spectral_gap": topo.spectral_gap,
             "algebraic_connectivity": topo.algebraic_connectivity,
             "tolerates_n_byz": topo.tolerates(n_byz),
+            "initial_diameter": d0,
             "us_per_round": us_round,
             "diameter_contraction": contraction,
         })
         print(f"topology_{topo.spec.name},{us_round:.1f},"
-              f"density={topo.density:.2f};contraction={contraction:.3f};"
-              f"deg_max={topo.deg_max}", flush=True)
+              f"K={K};d={d};density={topo.density:.2f};"
+              f"contraction={contraction:.3f};deg_max={topo.deg_max}",
+              flush=True)
+    return rows
 
+
+def run(smoke: bool = False) -> dict:
+    print("name,us_per_round,derived", flush=True)
+    if smoke:
+        rows = measure(*SIZES[0], repeats=10)
+    else:
+        rows = []
+        for size in SIZES:
+            rows += measure(*size, repeats=10)
     doc = {"bench": "topology", "backend": jax.default_backend(),
-           "smoke": smoke, "K": K, "d": d, "kappa": kappa, "n_byz": n_byz,
-           "method": "gda", "attack": "per_receiver large_noise(sigma=50)",
-           "initial_diameter": d0, "rows": rows}
+           "smoke": smoke, "method": "gda",
+           "attack": "per_receiver large_noise(sigma=50)", "rows": rows}
     # smoke runs get their own file so a CI-sized run can't silently
     # replace the tracked full-ladder baseline
     name = "BENCH_topology_smoke.json" if smoke else "BENCH_topology.json"
@@ -88,12 +103,9 @@ def run(K: int = 16, d: int = 20_000, kappa: int = 4, n_byz: int = 3,
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="seconds-scale CI run (small K/d, fewer repeats)")
+                    help="seconds-scale CI run (smallest ladder point only)")
     args = ap.parse_args()
-    if args.smoke:
-        run(K=8, d=512, kappa=3, n_byz=1, repeats=2, smoke=True)
-    else:
-        run()
+    run(smoke=args.smoke)
 
 
 if __name__ == "__main__":

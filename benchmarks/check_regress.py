@@ -1,0 +1,122 @@
+"""CI perf-regression gate over the BENCH_*.json files.
+
+Compares freshly-written smoke benchmark files against the committed
+full-run baselines and fails (exit 1) when any matched entry is more than
+``--tol``× slower than its baseline. Entries whose key is absent from the
+baseline are skipped (so a smoke run at CI size only gates the ladder
+points the baseline actually contains), as are entries whose baseline
+time is below ``--min-us`` (micro-entries drown in scheduler noise).
+
+  python -m benchmarks.check_regress \\
+      --pair benchmarks/BENCH_kernels_smoke.json:benchmarks/BENCH_kernels.json \\
+      --pair benchmarks/BENCH_topology_smoke.json:benchmarks/BENCH_topology.json
+
+Baselines are committed from a developer run of the full benchmarks;
+absolute wall-clock differs across machines, which is why the default
+tolerance is a generous 2× — the gate exists to catch order-of-magnitude
+perf bugs (an accidental de-jit, an interpret-mode fallback, a quadratic
+blowup), not 10% drift.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Optional, Tuple
+
+
+def row_key(doc: dict, row: dict) -> Optional[Tuple]:
+    """Identity of one benchmark entry, comparable across runs. Includes
+    every size parameter so differently-sized runs never alias."""
+    bench = doc.get("bench")
+    if bench == "kernels":
+        return (bench, row["kernel"], row["backend"],
+                row["K"], row["P"], row["D"])
+    if bench == "topology":
+        # sizes are per-row since PR 4; fall back to the doc-level fields
+        # older BENCH_topology.json files carried
+        get = lambda k: row.get(k, doc.get(k))
+        return (bench, row["topology"], get("K"), get("d"), get("kappa"),
+                get("n_byz"))
+    return None                       # unknown schema: never gates
+
+
+def row_us(row: dict) -> Optional[float]:
+    for k in ("us_per_call", "us_per_round"):
+        if k in row:
+            return float(row[k])
+    return None
+
+
+def load_rows(path: str) -> Tuple[dict, dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = {}
+    for row in doc.get("rows", ()):
+        key, us = row_key(doc, row), row_us(row)
+        if key is not None and us is not None:
+            rows[key] = us
+    return doc, rows
+
+
+def check_pair(current: str, baseline: str, tol: float,
+               min_us: float) -> list:
+    """Returns the list of regressions; prints per-pair status."""
+    if not os.path.exists(current):
+        print(f"check_regress: {current} not found — skipping pair")
+        return []
+    if not os.path.exists(baseline):
+        print(f"check_regress: baseline {baseline} not found — "
+              f"skipping pair")
+        return []
+    _, cur = load_rows(current)
+    _, base = load_rows(baseline)
+    regressions, matched, skipped = [], 0, 0
+    for key, us in sorted(cur.items()):
+        if key not in base:
+            skipped += 1
+            continue
+        if base[key] < min_us:
+            skipped += 1
+            continue
+        matched += 1
+        ratio = us / base[key]
+        if ratio > tol:
+            regressions.append((key, base[key], us, ratio))
+    print(f"check_regress: {current} vs {baseline}: {matched} gated, "
+          f"{skipped} skipped (absent/below {min_us}us), "
+          f"{len(regressions)} regressed")
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", action="append", default=[],
+                    metavar="CURRENT:BASELINE",
+                    help="colon-separated current:baseline json paths "
+                         "(repeatable)")
+    ap.add_argument("--tol", type=float, default=2.0,
+                    help="fail when current > tol * baseline (default 2.0)")
+    ap.add_argument("--min-us", type=float, default=200.0,
+                    help="ignore entries whose baseline is faster than "
+                         "this (default 200us; sub-dispatch-scale entries "
+                         "flap on shared runners)")
+    args = ap.parse_args(argv)
+    if not args.pair:
+        ap.error("at least one --pair is required")
+    regressions = []
+    for pair in args.pair:
+        current, _, baseline = pair.partition(":")
+        if not baseline:
+            ap.error(f"--pair needs CURRENT:BASELINE, got {pair!r}")
+        regressions += check_pair(current, baseline, args.tol, args.min_us)
+    for key, base_us, cur_us, ratio in regressions:
+        print(f"REGRESSION {'/'.join(map(str, key))}: "
+              f"{base_us:.1f}us -> {cur_us:.1f}us ({ratio:.2f}x > "
+              f"{args.tol:.2f}x)")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

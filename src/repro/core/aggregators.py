@@ -5,10 +5,12 @@ implementations per the paper: **bucketing ∘ Krum** (α_max = 1/4) and
 **bucketing ∘ RFA** (α_max = 1/2, smoothed Weiszfeld). Coordinate-wise
 median / trimmed mean are provided as additional baselines.
 
-Pairwise distances route through ``repro.kernels.pairwise_dist`` (Pallas on
-TPU, jnp oracle elsewhere); distances decompose over model shards so the
-distributed path psums the K×K matrix instead of gathering vectors
-(DESIGN.md §3).
+The aggregation hot path (pairwise distances, Krum scoring, the Weiszfeld
+iteration, the coordinate-wise trimmed mean) routes through the kernel
+suite behind ``repro.kernels.dispatch`` (DESIGN.md §6): compiled Pallas on
+TPU, the jnp oracles elsewhere, overridable globally or per call.
+Distances decompose over model shards so the distributed path psums the
+K×K matrix instead of gathering vectors (DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -19,12 +21,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.registry import Spec, register, resolve
+from repro.kernels.dispatch import get_kernel
 
 
-def pairwise_sq_dists(x: jnp.ndarray) -> jnp.ndarray:
-    """(K, d) -> (K, K) squared euclidean distances (jnp oracle path)."""
-    from repro.kernels.pairwise_dist import ops
-    return ops.pairwise_sq_dists(x)
+def pairwise_sq_dists(x: jnp.ndarray, backend: Optional[str] = None
+                      ) -> jnp.ndarray:
+    """(K, d) -> (K, K) squared euclidean distances (dispatched kernel)."""
+    return get_kernel("pairwise_dist")(x, backend=backend)
 
 
 # ---------------------------------------------------------------------------
@@ -37,12 +40,14 @@ def mean(x, key=None):
 
 def krum(x, n_byz: int, key=None, m: int = 1):
     """(Multi-)Krum [34]: score_i = Σ_{j in closest K-n_byz-2} ||x_j - x_i||²;
-    return the mean of the m lowest-scoring inputs."""
+    return the mean of the m lowest-scoring inputs.
+
+    Scoring routes through the ``krum_score`` kernel (Gram pass + on-device
+    rank network); only the final m-way selection runs as generic jnp.
+    """
     K = x.shape[0]
-    d2 = pairwise_sq_dists(x)
     n_near = max(K - n_byz - 2, 1)
-    near = jnp.sort(d2, axis=1)[:, 1:n_near + 1]      # skip self (0)
-    scores = jnp.sum(near, axis=1)
+    scores = get_kernel("krum_score")(x, n_near)
     if m == 1:
         return x[jnp.argmin(scores)]
     _, idx = jax.lax.top_k(-scores, m)
@@ -51,16 +56,8 @@ def krum(x, n_byz: int, key=None, m: int = 1):
 
 def rfa(x, key=None, n_iter: int = 32, nu: float = 1e-6):
     """Robust Federated Averaging [35]: geometric median via smoothed
-    Weiszfeld [36]."""
-    z = jnp.mean(x, axis=0)
-
-    def body(z, _):
-        dist = jnp.sqrt(jnp.sum((x - z) ** 2, axis=1) + nu)
-        w = 1.0 / dist
-        return jnp.sum(w[:, None] * x, axis=0) / jnp.sum(w), None
-
-    z, _ = jax.lax.scan(body, z, None, length=n_iter)
-    return z
+    Weiszfeld [36] — dispatched to the Gram-space ``rfa`` kernel."""
+    return get_kernel("rfa")(x, n_iter=n_iter, nu=nu)
 
 
 def coordinate_median(x, key=None):
@@ -70,10 +67,9 @@ def coordinate_median(x, key=None):
 def trimmed_mean(x, n_byz: int, key=None):
     """Coordinate-wise: drop the n_byz largest and smallest per coordinate.
 
-    Routes through the Pallas ``trimmed_mean`` kernel on TPU.
+    Routes through the dispatched ``trimmed_mean`` kernel.
     """
-    from repro.kernels.trimmed_mean import ops
-    return ops.trimmed_mean(x, n_byz)
+    return get_kernel("trimmed_mean")(x, n_byz)
 
 
 def centered_clip(x, key=None, tau: float = 1.0, n_iter: int = 5,

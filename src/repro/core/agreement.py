@@ -23,6 +23,7 @@ receiver observes its own adversarial version only along its in-edges.
 """
 from __future__ import annotations
 
+import contextlib
 import itertools
 from typing import Callable, NamedTuple, Optional
 
@@ -32,6 +33,8 @@ import numpy as np
 
 from repro.core.aggregators import pairwise_sq_dists
 from repro.core.registry import REGISTRY, Spec, register, resolve
+from repro.kernels import dispatch
+from repro.kernels.dispatch import get_kernel
 from repro.topology import Topology, resolve_topology
 
 #: Largest neighbor-multiset size ``mda_mean`` will enumerate subsets for.
@@ -83,10 +86,15 @@ def gda_mean(received: jnp.ndarray, own: jnp.ndarray,
 
 
 class AgreementMethod(NamedTuple):
-    """A resolved agreement selection rule: ``select(received, own, n_keep)
-    -> (d,)`` plus the method's tolerated ``alpha_bar``."""
-    select: Callable
+    """A resolved agreement rule. Selection methods (MDA/GDA) carry
+    ``select(received, own, n_keep) -> (d,)`` plus the tolerated
+    ``alpha_bar``; coordinate-wise methods instead carry ``reduce`` (a
+    gossip-reduce mode) and run through the fused ``gossip_reduce``
+    kernel."""
+    select: Optional[Callable]
     alpha_bar: float
+    reduce: Optional[str] = None
+    n_trim: int = 0
 
 
 @register("agreement", "mda", max_agents=MDA_MAX_AGENTS)
@@ -100,20 +108,50 @@ def _gda_factory(alpha_bar: float = 0.2):
     return AgreementMethod(gda_mean, alpha_bar)
 
 
+@register("agreement", "cwmean")
+def _cwmean_factory():
+    """Plain lazy-gossip averaging (no Byzantine tolerance) — the α = 0
+    baseline, and the fastest contraction on honest graphs."""
+    return AgreementMethod(None, 0.0, reduce="mean")
+
+
+@register("agreement", "cwmed")
+def _cwmed_factory():
+    """Coordinate-wise median over each neighbor multiset (α_max = 1/2
+    per coordinate under bounded dispersion)."""
+    return AgreementMethod(None, 0.5, reduce="median")
+
+
+@register("agreement", "cwtm")
+def _cwtm_factory(n_byz: int = 0, n_trim: Optional[int] = None):
+    """Coordinate-wise trimmed mean over each neighbor multiset; trims
+    ``n_trim`` (default: the config's ``n_byz``) from each tail, so it
+    needs ``deg_max > 2·n_trim``."""
+    nt = n_byz if n_trim is None else n_trim
+    return AgreementMethod(None, 0.25, reduce="trimmed", n_trim=nt)
+
+
 def avg_agree(theta: jnp.ndarray, kappa: int, n_byz: int,
               byz_mask: Optional[jnp.ndarray] = None,
               method="gda",
               attack: Optional[Callable] = None,
               key: Optional[jnp.ndarray] = None,
               alpha_bar: Optional[float] = None,
-              topology=None) -> jnp.ndarray:
+              topology=None,
+              kernel_backend: Optional[str] = None) -> jnp.ndarray:
     """Simulate Avg-Agree_κ over K agents (paper Algorithm 3, generalized
     to gossip graphs).
 
     theta: (K, d) current parameters (honest agents' entries are real; the
     Byzantine entries are ignored — Byzantines send whatever ``attack``
     produces, possibly per-receiver).
-    method: agreement spec — "mda" | "gda" | "gda(alpha_bar=0.25)" | Spec.
+    method: agreement spec — "mda" | "gda" | "gda(alpha_bar=0.25)" |
+    "cwmean" | "cwmed" | "cwtm(n_trim=2)" | Spec. The cw* methods reduce
+    each neighbor multiset coordinate-wise through the fused
+    ``gossip_reduce`` kernel. ``kernel_backend`` scopes the dispatch
+    backend over the whole multi-round core (trace-time), so it governs
+    every kernel inside — the gossip reduces and MDA's pairwise-distance
+    kernel alike.
     attack: fn(broadcast (K,d), byz_mask, key) -> (K_recv, K_send, d) or
     (K_send, d) messages. None = honest broadcast. An active attack
     requires an explicit ``key`` — there is no silent PRNGKey(0) fallback
@@ -126,7 +164,7 @@ def avg_agree(theta: jnp.ndarray, kappa: int, n_byz: int,
     value an honest agent in that slot would compute; callers mask them).
     """
     K, d = theta.shape
-    m = resolve("agreement", method)
+    m = resolve("agreement", method, n_byz=n_byz)
     topo = resolve_topology(topology, K)
     nbr = jnp.asarray(topo.nbr_idx)                      # (K, P)
     P = topo.deg_max
@@ -156,6 +194,10 @@ def avg_agree(theta: jnp.ndarray, kappa: int, n_byz: int,
 
     def one_round(th, k):
         if attack is None:
+            if m.reduce is not None:
+                # honest broadcast: gather + reduce fused in one kernel
+                return get_kernel("gossip_reduce")(
+                    th, nbr, mode=m.reduce, n_trim=m.n_trim), None
             recv = th[nbr]                               # (K, P, d)
         else:
             a = attack(th, byz_mask, k)
@@ -167,12 +209,26 @@ def avg_agree(theta: jnp.ndarray, kappa: int, n_byz: int,
                                  a[rows, nbr], th[nbr])
             else:
                 sent = jnp.where(byz_mask[:, None], a, th)
+                if m.reduce is not None:
+                    # consistent attack: still one shared message matrix,
+                    # so the fused gather applies
+                    return get_kernel("gossip_reduce")(
+                        sent, nbr, mode=m.reduce, n_trim=m.n_trim), None
                 recv = sent[nbr]
+        if m.reduce is not None:
+            return get_kernel("neighbor_reduce")(
+                recv, mode=m.reduce, n_trim=m.n_trim), None
         new = jax.vmap(lambda rv, own: m.select(rv, own, n_keep)
                        )(recv, th)
         return new, None
 
-    theta, _ = jax.lax.scan(one_round, theta, jax.random.split(key, kappa))
+    # backend dispatch is a trace-time decision, so scoping the scan is
+    # enough to reroute every kernel the rounds touch
+    ctx = (dispatch.use_backend(kernel_backend) if kernel_backend
+           else contextlib.nullcontext())
+    with ctx:
+        theta, _ = jax.lax.scan(one_round, theta,
+                                jax.random.split(key, kappa))
     return theta
 
 

@@ -199,6 +199,12 @@ _PROVIDERS: Dict[str, Tuple[str, ...]] = {
     "algo": ("repro.core.decbyzpg", "repro.core.byzpg"),
     "fed_aggregator": ("repro.distributed.aggregation",),
     "fed_attack": ("repro.distributed.aggregation",),
+    "kernel": ("repro.kernels.pairwise_dist.ops",
+               "repro.kernels.trimmed_mean.ops",
+               "repro.kernels.gossip_reduce.ops",
+               "repro.kernels.rfa.ops",
+               "repro.kernels.krum_score.ops",
+               "repro.kernels.flash_attention.ops"),
 }
 
 

@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel suite for the robust-aggregation hot path.
+
+Each subpackage is one kernel: ``<name>.py`` (the Pallas body), ``ref.py``
+(the pure-jnp oracle), ``ops.py`` (the dispatched entry point). Backend
+selection — compiled Pallas on TPU, the Pallas interpreter, or the jnp
+oracle — is centralized in :mod:`repro.kernels.dispatch` and exposed as
+the ``kernel`` registry namespace (DESIGN.md §6).
+"""

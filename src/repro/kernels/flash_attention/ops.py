@@ -1,17 +1,13 @@
-"""Jit'd public entry point for flash attention.
+"""Dispatched entry point for flash attention.
 
 Accepts model-layout tensors q: (B, Sq, H, hd), k/v: (B, Sk, Hkv, hd).
+``use_pallas`` is kept for backward compatibility and maps onto the
+dispatch backends (True -> pallas, interpreted off-TPU; False -> jnp).
 """
-import jax
-import jax.numpy as jnp
-
+from repro.kernels.dispatch import on_tpu, register_kernel
 from repro.kernels.flash_attention import ref
 from repro.kernels.flash_attention.flash_attention import (
     flash_attention_pallas)
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def _fold(x):
@@ -24,14 +20,24 @@ def _unfold(x, B):
     return x.reshape(B, BH // B, S, hd).transpose(0, 2, 1, 3)
 
 
-def flash_attention(q, k, v, window=None, use_pallas=None, **kw):
-    if use_pallas is None:
-        use_pallas = _on_tpu()
+def _jnp_impl(q, k, v, n_q_heads, window=None, **_pallas_only):
+    # block_q/block_k (and other Pallas tuning kwargs) are meaningless to
+    # the oracle; accept and drop them so a caller can flip backends
+    # without changing its call
+    return ref.attention(q, k, v, n_q_heads=n_q_heads, window=window)
+
+
+_kernel = register_kernel(
+    "flash_attention", jnp_impl=_jnp_impl, pallas_impl=flash_attention_pallas)
+
+
+def flash_attention(q, k, v, window=None, use_pallas=None, backend=None,
+                    **kw):
+    if backend is None and use_pallas is not None:
+        backend = ("pallas" if on_tpu() else "pallas-interpret") \
+            if use_pallas else "jnp"
     B, Sq, H, hd = q.shape
     qf, kf, vf = _fold(q), _fold(k), _fold(v)
-    if use_pallas:
-        out = flash_attention_pallas(qf, kf, vf, n_q_heads=H, window=window,
-                                     interpret=not _on_tpu(), **kw)
-    else:
-        out = ref.attention(qf, kf, vf, n_q_heads=H, window=window)
+    out = _kernel(qf, kf, vf, n_q_heads=H, window=window, backend=backend,
+                  **kw)
     return _unfold(out, B)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: masked-neighbor gossip reduce for Avg-Agree rounds.
+
+Two entry points over the padded neighbor layout of DESIGN.md §5:
+
+* :func:`gossip_reduce_pallas` — fused gather + coordinate-wise robust
+  reduce. The gather ``msgs[nbr_idx]`` is expressed as ``deg_max`` one-hot
+  (K, K) matmuls on the MXU (row gathers lower poorly on TPU; a one-hot
+  contraction is the idiomatic form), so the received tensor never
+  round-trips to HBM — each d-block is gathered and reduced in VMEM.
+* :func:`neighbor_reduce_pallas` — the reduce alone, for the per-receiver
+  equivocation path where the (K, deg_max, d) received tensor is already
+  materialized by the attack.
+
+Blocking: grid over the parameter axis; each program sees the full agent
+axis (K is small, padded to the sublane multiple 8) and one lane-aligned
+d-block. The median/trimmed reduce builds a (deg_max², K, block_d) rank
+network in registers, so ``block_d`` should shrink as deg_max grows
+(deg_max² · Kp · block_d · 4B per buffer must fit VMEM); 128 is safe to
+K = deg_max = 32.
+
+The reduce body is imported from ``ref.py`` — kernel and oracle share it,
+making interpret-mode parity exact by construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.gossip_reduce.ref import check_mode, cw_reduce
+
+
+def _gather_reduce_kernel(mode, n_trim, P, msgs_ref, oh_ref, o_ref):
+    x = msgs_ref[...].astype(jnp.float32)                # (Kp, bd)
+    vals = jnp.stack([
+        jax.lax.dot_general(oh_ref[p], x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+        for p in range(P)])                              # (P, Kp, bd)
+    o_ref[...] = cw_reduce(vals, mode, n_trim)
+
+
+def _reduce_kernel(mode, n_trim, recv_ref, o_ref):
+    o_ref[...] = cw_reduce(recv_ref[...].astype(jnp.float32), mode, n_trim)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "n_trim", "block_d",
+                                             "interpret"))
+def gossip_reduce_pallas(msgs: jnp.ndarray, nbr: jnp.ndarray,
+                         mode: str = "mean", n_trim: int = 0,
+                         block_d: int = 128,
+                         interpret: bool = True) -> jnp.ndarray:
+    """msgs (K, d), nbr (K, P) int -> (K, d) reduced over each receiver's
+    neighbor multiset."""
+    K, d = msgs.shape
+    _, P = nbr.shape
+    check_mode(mode, P, n_trim)
+    Kp = -(-K // 8) * 8
+    dp = -(-d // block_d) * block_d
+    mp = jnp.pad(msgs, ((0, Kp - K), (0, dp - d)))
+    # (P, Kp, Kp) gather matrices: oh[p, r, s] = 1 iff nbr[r, p] == s
+    oh = (nbr[:, :, None] == jnp.arange(K)[None, None, :])
+    oh = jnp.pad(oh.astype(jnp.float32).transpose(1, 0, 2),
+                 ((0, 0), (0, Kp - K), (0, Kp - K)))
+    out = pl.pallas_call(
+        functools.partial(_gather_reduce_kernel, mode, n_trim, P),
+        grid=(dp // block_d,),
+        in_specs=[pl.BlockSpec((Kp, block_d), lambda i: (0, i)),
+                  pl.BlockSpec((P, Kp, Kp), lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((Kp, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((Kp, dp), jnp.float32),
+        interpret=interpret,
+    )(mp, oh)
+    return out[:K, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "n_trim", "block_d",
+                                             "interpret"))
+def neighbor_reduce_pallas(recv: jnp.ndarray, mode: str = "mean",
+                           n_trim: int = 0, block_d: int = 128,
+                           interpret: bool = True) -> jnp.ndarray:
+    """recv (K, P, d) -> (K, d); reduce over the (already gathered)
+    neighbor axis."""
+    K, P, d = recv.shape
+    check_mode(mode, P, n_trim)
+    Kp = -(-K // 8) * 8
+    dp = -(-d // block_d) * block_d
+    # layout (P, Kp, bd): neighbor axis leading, agents on the sublanes
+    rp = jnp.pad(recv.transpose(1, 0, 2),
+                 ((0, 0), (0, Kp - K), (0, dp - d)))
+    out = pl.pallas_call(
+        functools.partial(_reduce_kernel, mode, n_trim),
+        grid=(dp // block_d,),
+        in_specs=[pl.BlockSpec((P, Kp, block_d), lambda i: (0, 0, i))],
+        out_specs=pl.BlockSpec((Kp, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((Kp, dp), jnp.float32),
+        interpret=interpret,
+    )(rp)
+    return out[:K, :d]

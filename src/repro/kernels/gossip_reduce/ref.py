@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the masked-neighbor gossip reduce.
+
+One agreement round over the padded neighbor table ``nbr_idx (K, deg_max)``
+(DESIGN.md §5): gather each receiver's neighbor messages and reduce them
+coordinate-wise — mean, median, or trimmed mean over the neighbor axis.
+Padding slots hold the receiver's own index, so every slot is a real
+message and no validity masking is needed.
+
+The rank-based reduce body (:func:`cw_reduce`) is shared with the Pallas
+kernel, which makes the two paths bit-parity-by-construction for the
+median/trimmed modes (O(P²) comparison network, ties broken by slot
+index — no sort primitive needed on the VPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MODES = ("mean", "median", "trimmed")
+
+
+def check_mode(mode: str, deg_max: int, n_trim: int) -> None:
+    if mode not in MODES:
+        raise ValueError(f"unknown gossip reduce mode {mode!r}; "
+                         f"expected one of {MODES}")
+    if mode == "trimmed" and not 0 <= 2 * n_trim < deg_max:
+        raise ValueError(f"trimmed gossip reduce needs deg_max > 2*n_trim, "
+                         f"got deg_max={deg_max}, n_trim={n_trim}")
+
+
+def cw_reduce(v: jnp.ndarray, mode: str, n_trim: int,
+              n_valid: int = None) -> jnp.ndarray:
+    """Coordinate-wise reduce of ``v (P, ..., d)`` over its leading axis.
+
+    ``n_valid`` (default: all P) marks a sublane-padded leading axis:
+    slots ≥ n_valid are ranked last and excluded, which is how the
+    ``trimmed_mean`` kernel reduces its K-padded agent axis through this
+    same body (one comparison network, one tie-break rule, everywhere).
+    """
+    P = v.shape[0]
+    n = P if n_valid is None else n_valid
+    v = v.astype(jnp.float32)
+    tail = (1,) * (v.ndim - 1)
+    vld = jax.lax.broadcasted_iota(jnp.int32, (P,) + tail, 0) < n
+    if mode == "mean":
+        return jnp.sum(jnp.where(vld, v, 0.0), axis=0) / n
+    idx = jax.lax.broadcasted_iota(jnp.int32, (P, 1) + tail, 0)
+    xv = jnp.where(vld, v, jnp.float32(3.4e38))          # pad slots last
+    less = (xv[:, None] < v[None, :]) | (
+        (xv[:, None] == v[None, :]) & (idx < idx.swapaxes(0, 1)))
+    rank = jnp.sum(less.astype(jnp.int32), axis=0)       # (P, ..., d)
+    if mode == "median":
+        lo, hi = (n - 1) // 2, n // 2
+        pick = lambda r: jnp.sum(jnp.where((rank == r) & vld, v, 0.0),
+                                 axis=0)
+        return 0.5 * (pick(lo) + pick(hi))
+    keep = (rank >= n_trim) & (rank < n - n_trim) & vld
+    return jnp.sum(jnp.where(keep, v, 0.0), axis=0) / (n - 2 * n_trim)
+
+
+def neighbor_reduce(recv: jnp.ndarray, mode: str = "mean",
+                    n_trim: int = 0) -> jnp.ndarray:
+    """Reduce an already-gathered ``recv (K, P, d)`` tensor to ``(K, d)``."""
+    K, P, d = recv.shape
+    check_mode(mode, P, n_trim)
+    return cw_reduce(recv.transpose(1, 0, 2), mode, n_trim)
+
+
+def gossip_reduce(msgs: jnp.ndarray, nbr: jnp.ndarray, mode: str = "mean",
+                  n_trim: int = 0) -> jnp.ndarray:
+    """Fused gather + reduce: ``msgs (K, d)``, ``nbr (K, P)`` -> ``(K, d)``."""
+    return neighbor_reduce(msgs[nbr], mode, n_trim)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for Krum scoring [34].
+
+``score_i = Σ_{j ∈ closest n_near, j ≠ i} ‖x_j − x_i‖²`` — the historical
+``aggregators.krum`` scoring verbatim (sort each distance row, skip the
+self entry at rank 0, sum the next ``n_near``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.pairwise_dist import ref as pd_ref
+
+
+def scores_from_d2(d2: jnp.ndarray, n_near: int) -> jnp.ndarray:
+    """d2: (K, K) squared distances -> (K,) Krum scores."""
+    near = jnp.sort(d2, axis=1)[:, 1:n_near + 1]         # skip self (0)
+    return jnp.sum(near, axis=1)
+
+
+def krum_scores(x: jnp.ndarray, n_near: int) -> jnp.ndarray:
+    """x: (K, d) -> (K,) Krum scores over the full input set."""
+    return scores_from_d2(pd_ref.pairwise_sq_dists(x), n_near)

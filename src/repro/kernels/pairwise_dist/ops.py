@@ -1,23 +1,13 @@
-"""Jit'd public entry point for pairwise squared distances.
+"""Dispatched entry point for pairwise squared distances.
 
-``use_pallas=None`` auto-selects: Pallas (compiled) on TPU, the jnp oracle
-elsewhere (the Pallas body itself is validated in interpret mode by the
-kernel test sweep).
+Backend selection (pallas / pallas-interpret / jnp) lives in
+``repro.kernels.dispatch``; the Pallas body is validated in interpret mode
+by the kernel test sweep.
 """
-import jax
-
+from repro.kernels.dispatch import register_kernel
 from repro.kernels.pairwise_dist import ref
-from repro.kernels.pairwise_dist.pairwise_dist import (
-    pairwise_sq_dists_pallas)
+from repro.kernels.pairwise_dist.pairwise_dist import pairwise_sq_dists_pallas
 
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def pairwise_sq_dists(x, use_pallas=None):
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if use_pallas:
-        return pairwise_sq_dists_pallas(x, interpret=not _on_tpu())
-    return ref.pairwise_sq_dists(x)
+pairwise_sq_dists = register_kernel(
+    "pairwise_dist", jnp_impl=ref.pairwise_sq_dists,
+    pallas_impl=pairwise_sq_dists_pallas)

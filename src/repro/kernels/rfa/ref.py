@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for RFA: geometric median via smoothed Weiszfeld [36].
+
+This is the historical ``aggregators.rfa`` body verbatim (minus the unused
+key argument) — the aggregator now routes here through the dispatcher, so
+the jnp backend is bit-identical to the pre-kernel behavior.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rfa(x: jnp.ndarray, n_iter: int = 32, nu: float = 1e-6) -> jnp.ndarray:
+    """x: (K, d) -> (d,) smoothed geometric median."""
+    z = jnp.mean(x, axis=0)
+
+    def body(z, _):
+        dist = jnp.sqrt(jnp.sum((x - z) ** 2, axis=1) + nu)
+        w = 1.0 / dist
+        return jnp.sum(w[:, None] * x, axis=0) / jnp.sum(w), None
+
+    z, _ = jax.lax.scan(body, z, None, length=n_iter)
+    return z

@@ -1,17 +1,12 @@
-"""Jit'd public entry point for the coordinate-wise trimmed mean."""
-import jax
+"""Dispatched entry point for the coordinate-wise trimmed mean.
 
+Backend selection (pallas / pallas-interpret / jnp) lives in
+``repro.kernels.dispatch``; override per call with ``backend=`` or globally
+via ``REPRO_KERNEL_BACKEND``.
+"""
+from repro.kernels.dispatch import register_kernel
 from repro.kernels.trimmed_mean import ref
 from repro.kernels.trimmed_mean.trimmed_mean import trimmed_mean_pallas
 
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def trimmed_mean(x, n_trim, use_pallas=None):
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if use_pallas:
-        return trimmed_mean_pallas(x, n_trim, interpret=not _on_tpu())
-    return ref.trimmed_mean(x, n_trim)
+trimmed_mean = register_kernel(
+    "trimmed_mean", jnp_impl=ref.trimmed_mean, pallas_impl=trimmed_mean_pallas)

@@ -1,19 +1,15 @@
 """Pure-jnp oracle for the coordinate-wise trimmed mean.
 
-Rank-based (O(K^2) per coordinate, tie-broken by input index) so the oracle
-and the Pallas kernel are bit-identical by construction.
+Delegates to the shared rank-network reduce (``gossip_reduce.ref
+.cw_reduce`` — O(K²) per coordinate, tie-broken by input index), the same
+body the Pallas kernel runs, so oracle and kernel are bit-identical by
+construction and the tie-break rule lives in exactly one place.
 """
 import jax.numpy as jnp
+
+from repro.kernels.gossip_reduce.ref import cw_reduce
 
 
 def trimmed_mean(x: jnp.ndarray, n_trim: int) -> jnp.ndarray:
     """x: (K, d) -> (d,): mean over ranks [n_trim, K - n_trim)."""
-    K = x.shape[0]
-    xf = x.astype(jnp.float32)
-    idx = jnp.arange(K)
-    less = (xf[:, None, :] < xf[None, :, :]) | (
-        (xf[:, None, :] == xf[None, :, :])
-        & (idx[:, None, None] < idx[None, :, None]))
-    rank = jnp.sum(less, axis=0)                        # (K, d)
-    keep = (rank >= n_trim) & (rank < K - n_trim)
-    return jnp.sum(jnp.where(keep, xf, 0.0), axis=0) / (K - 2 * n_trim)
+    return cw_reduce(x, "trimmed", n_trim)

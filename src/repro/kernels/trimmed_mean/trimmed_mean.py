@@ -3,9 +3,10 @@
 The robust-aggregation hot-spot for coordinate-wise aggregators: for each of
 d coordinates, drop the n_trim smallest and largest of K agent values and
 average the rest. K is small (<=32); d is the model dimension (billions).
-We tile d into lane-aligned VMEM blocks and compute ranks with an O(K^2)
-comparison network (no sort primitive needed on the VPU), tie-broken by
-agent index exactly as the oracle.
+We tile d into lane-aligned VMEM blocks; the rank-network reduce body
+(O(K^2) comparisons, no sort primitive needed on the VPU, tie-broken by
+agent index) is shared with the jnp oracle via ``gossip_reduce.ref
+.cw_reduce``, with ``n_valid=K`` masking the sublane-padded agent rows.
 """
 from __future__ import annotations
 
@@ -15,20 +16,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.gossip_reduce.ref import cw_reduce
+
 
 def _tm_kernel(n_trim, K, x_ref, o_ref):
-    x = x_ref[...].astype(jnp.float32)                  # (Kp, bd)
-    Kp = x.shape[0]
-    idx = jax.lax.broadcasted_iota(jnp.int32, (Kp, 1, 1), 0)
-    valid = (idx < K)
-    big = jnp.float32(3.4e38)
-    xv = jnp.where(valid, x[:, None, :], big)           # pad rows rank last
-    less = (xv < x[None, :, :]) | (
-        (xv == x[None, :, :]) & (idx < idx.transpose(1, 0, 2)))
-    rank = jnp.sum(less.astype(jnp.int32), axis=0)      # (Kp, bd)
-    keep = (rank >= n_trim) & (rank < K - n_trim) & (valid[:, 0, :] >= 1)
-    o_ref[...] = (jnp.sum(jnp.where(keep, x, 0.0), axis=0,
-                          keepdims=True) / (K - 2 * n_trim))
+    x = x_ref[...]                                      # (Kp, bd)
+    o_ref[...] = cw_reduce(x, "trimmed", n_trim, n_valid=K)[None, :]
 
 
 @functools.partial(jax.jit,

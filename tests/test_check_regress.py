@@ -1,0 +1,84 @@
+"""Unit tests for the CI perf-regression gate (benchmarks/check_regress)."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+from benchmarks.check_regress import main  # noqa: E402
+
+
+def _kernels_doc(us_by_key):
+    rows = [{"kernel": k, "backend": b, "K": K, "P": P, "D": D,
+             "us_per_call": us}
+            for (k, b, K, P, D), us in us_by_key.items()]
+    return {"bench": "kernels", "smoke": False, "rows": rows}
+
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+BASE = {("rfa", "jnp", 8, 4, 512): 1000.0,
+        ("trimmed_mean", "jnp", 8, 4, 512): 400.0,
+        ("krum_score", "jnp", 8, 4, 512): 10.0}     # below --min-us floor
+
+
+def test_passes_within_tolerance(tmp_path):
+    cur = {k: v * 1.5 for k, v in BASE.items()}
+    argv = ["--pair",
+            f"{_write(tmp_path, 'cur.json', _kernels_doc(cur))}:"
+            f"{_write(tmp_path, 'base.json', _kernels_doc(BASE))}"]
+    assert main(argv) == 0
+
+
+def test_fails_on_2x_slowdown(tmp_path):
+    cur = dict(BASE)
+    cur[("rfa", "jnp", 8, 4, 512)] = 2100.0        # injected 2.1x
+    argv = ["--pair",
+            f"{_write(tmp_path, 'cur.json', _kernels_doc(cur))}:"
+            f"{_write(tmp_path, 'base.json', _kernels_doc(BASE))}"]
+    assert main(argv) == 1
+    assert main(argv + ["--tol", "3.0"]) == 0      # tolerance configurable
+
+
+def test_min_us_floor_skips_micro_entries(tmp_path):
+    cur = dict(BASE)
+    cur[("krum_score", "jnp", 8, 4, 512)] = 90.0   # 9x, but base is 10us
+    argv = ["--pair",
+            f"{_write(tmp_path, 'cur.json', _kernels_doc(cur))}:"
+            f"{_write(tmp_path, 'base.json', _kernels_doc(BASE))}"]
+    assert main(argv) == 0
+    assert main(argv + ["--min-us", "5"]) == 1
+
+
+def test_absent_keys_and_missing_baseline_skipped(tmp_path):
+    cur = dict(BASE)
+    cur[("gossip_reduce", "jnp", 16, 8, 4096)] = 1e9   # no baseline entry
+    cur_path = _write(tmp_path, "cur.json", _kernels_doc(cur))
+    base_path = _write(tmp_path, "base.json", _kernels_doc(BASE))
+    assert main(["--pair", f"{cur_path}:{base_path}"]) == 0
+    # whole baseline file missing: pair skipped, not an error
+    assert main(["--pair", f"{cur_path}:{tmp_path}/nope.json"]) == 0
+    assert main(["--pair", f"{tmp_path}/nope.json:{base_path}"]) == 0
+
+
+def test_differently_sized_topology_runs_never_alias(tmp_path):
+    smoke = {"bench": "topology", "K": 8, "d": 512, "kappa": 3, "n_byz": 1,
+             "rows": [{"topology": "complete", "us_per_round": 1e9}]}
+    full = {"bench": "topology", "K": 16, "d": 20000, "kappa": 4,
+            "n_byz": 3,
+            "rows": [{"topology": "complete", "us_per_round": 100.0}]}
+    argv = ["--pair", f"{_write(tmp_path, 's.json', smoke)}:"
+            f"{_write(tmp_path, 'f.json', full)}"]
+    assert main(argv) == 0                         # keys differ -> skipped
+
+
+def test_pair_argument_validation(tmp_path):
+    with pytest.raises(SystemExit):
+        main([])
+    with pytest.raises(SystemExit):
+        main(["--pair", "no-colon"])

@@ -9,12 +9,31 @@ from repro.kernels.flash_attention import ref as fa_ref
 from repro.kernels.flash_attention.flash_attention import (
     flash_attention_pallas)
 from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.gossip_reduce import ref as gr_ref
+from repro.kernels.gossip_reduce.gossip_reduce import (
+    gossip_reduce_pallas, neighbor_reduce_pallas)
+from repro.kernels.krum_score import ref as ks_ref
+from repro.kernels.krum_score.krum_score import krum_scores_pallas
 from repro.kernels.pairwise_dist import ref as pd_ref
 from repro.kernels.pairwise_dist.pairwise_dist import pairwise_sq_dists_pallas
+from repro.kernels.rfa import ref as rfa_ref
+from repro.kernels.rfa.rfa import rfa_pallas
 from repro.kernels.trimmed_mean import ref as tm_ref
 from repro.kernels.trimmed_mean.trimmed_mean import trimmed_mean_pallas
 
 KEY = jax.random.PRNGKey(0)
+
+
+def _padded_nbr(K, deg, seed=0):
+    """A (K, deg_max) neighbor table in the topology layout: sorted sender
+    indices, low-degree rows padded with the receiver's own index."""
+    rng = np.random.default_rng(seed + 1000 * K + deg)
+    rows = []
+    for r in range(K):
+        d_r = rng.integers(1, deg + 1)                 # ragged real degrees
+        nbrs = rng.choice(K, size=d_r, replace=False).tolist()
+        rows.append(np.sort(nbrs + [r] * (deg - d_r)))
+    return jnp.asarray(np.stack(rows), jnp.int32)
 
 
 @pytest.mark.parametrize("K,d", [(3, 17), (8, 512), (13, 1000), (16, 4096),
@@ -45,6 +64,96 @@ def test_trimmed_mean_with_ties():
     got = trimmed_mean_pallas(x, 1, interpret=True)
     want = tm_ref.trimmed_mean(x, 1)
     np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+# shapes deliberately cross the d-block boundary (block_d=128 for the
+# gossip kernels, 512 elsewhere), use odd K, and exercise deg_max padding
+@pytest.mark.parametrize("K,P,d", [(3, 2, 17), (8, 4, 128), (9, 5, 300),
+                                   (13, 13, 1000), (16, 6, 513)])
+@pytest.mark.parametrize("mode,n_trim", [("mean", 0), ("median", 0),
+                                         ("trimmed", 1)])
+def test_gossip_reduce_sweep(K, P, d, mode, n_trim):
+    if mode == "trimmed" and P <= 2 * n_trim:
+        pytest.skip("trimming needs deg_max > 2*n_trim")
+    msgs = jax.random.normal(KEY, (K, d))
+    nbr = _padded_nbr(K, P)
+    got = gossip_reduce_pallas(msgs, nbr, mode=mode, n_trim=n_trim,
+                               interpret=True)
+    want = gr_ref.gossip_reduce(msgs, nbr, mode=mode, n_trim=n_trim)
+    np.testing.assert_allclose(got, want, atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("K,P,d", [(3, 2, 17), (9, 4, 300), (13, 7, 1000)])
+@pytest.mark.parametrize("mode,n_trim", [("mean", 0), ("median", 0),
+                                         ("trimmed", 2)])
+def test_neighbor_reduce_sweep(K, P, d, mode, n_trim):
+    if mode == "trimmed" and P <= 2 * n_trim:
+        pytest.skip("trimming needs deg_max > 2*n_trim")
+    recv = jax.random.normal(KEY, (K, P, d))
+    got = neighbor_reduce_pallas(recv, mode=mode, n_trim=n_trim,
+                                 interpret=True)
+    want = gr_ref.neighbor_reduce(recv, mode=mode, n_trim=n_trim)
+    np.testing.assert_allclose(got, want, atol=1e-6, rtol=1e-6)
+
+
+def test_gossip_reduce_median_with_ties():
+    """Tie-broken ranks must reproduce the oracle exactly on constant
+    columns (the degenerate case rank networks get wrong first)."""
+    msgs = jnp.ones((7, 40)).at[0].set(3.0).at[5].set(-2.0)
+    nbr = _padded_nbr(7, 4)
+    for mode, nt in (("median", 0), ("trimmed", 1)):
+        got = gossip_reduce_pallas(msgs, nbr, mode=mode, n_trim=nt,
+                                   interpret=True)
+        want = gr_ref.gossip_reduce(msgs, nbr, mode=mode, n_trim=nt)
+        np.testing.assert_allclose(got, want, atol=0)
+
+
+def test_gossip_reduce_bad_args():
+    msgs = jnp.ones((4, 8))
+    nbr = jnp.zeros((4, 3), jnp.int32)
+    with pytest.raises(ValueError, match="mode"):
+        gr_ref.gossip_reduce(msgs, nbr, mode="sum")
+    with pytest.raises(ValueError, match="deg_max"):
+        gossip_reduce_pallas(msgs, nbr, mode="trimmed", n_trim=2,
+                             interpret=True)
+
+
+@pytest.mark.parametrize("K,d", [(3, 17), (8, 512), (13, 1000), (16, 4096)])
+@pytest.mark.parametrize("n_iter", [1, 16])
+def test_rfa_sweep(K, d, n_iter):
+    x = jax.random.normal(KEY, (K, d)) + 1.5
+    got = rfa_pallas(x, n_iter=n_iter, interpret=True)
+    want = rfa_ref.rfa(x, n_iter=n_iter)
+    # Gram-space distances lose a few bits to cancellation vs the direct
+    # subtraction — the iteration is self-correcting, so the fixed points
+    # agree to ~1e-5 relative
+    scale = float(jnp.max(jnp.abs(want)))
+    np.testing.assert_allclose(got, want, atol=2e-4 * max(scale, 1.0))
+
+
+def test_rfa_resists_outlier():
+    """The kernel's geometric median, like the oracle's, ignores a far
+    outlier (the property the aggregator relies on)."""
+    x = jnp.concatenate([jnp.ones((6, 64)), jnp.full((1, 64), 1e3)])
+    z = rfa_pallas(x, n_iter=64, interpret=True)
+    assert float(jnp.max(jnp.abs(z - 1.0))) < 1e-2
+
+
+@pytest.mark.parametrize("K,d,n_near", [(4, 33, 1), (9, 300, 4),
+                                        (13, 1000, 8), (16, 513, 13)])
+def test_krum_score_sweep(K, d, n_near):
+    x = jax.random.normal(KEY, (K, d))
+    got = krum_scores_pallas(x, n_near=n_near, interpret=True)
+    want = ks_ref.krum_scores(x, n_near=n_near)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * d)
+
+
+def test_krum_score_ranks_outlier_last():
+    x = jnp.zeros((8, 50)).at[3].set(100.0) \
+        + 0.01 * jax.random.normal(KEY, (8, 50))
+    got = krum_scores_pallas(x, n_near=4, interpret=True)
+    assert int(jnp.argmax(got)) == 3
+    assert int(jnp.argmax(ks_ref.krum_scores(x, n_near=4))) == 3
 
 
 @pytest.mark.parametrize("B,H,Hkv,Sq,Sk,hd", [

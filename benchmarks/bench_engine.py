@@ -1,0 +1,177 @@
+"""Engine benchmark: fused-scan vs legacy dispatch, and the lane-batched
+sweep vs the per-scenario loop (DESIGN.md §2).
+
+Two families of rows land in ``benchmarks/BENCH_engine.json``:
+
+* single-config (full runs only): the historical fused-vs-legacy
+  comparison on the fig1 K=13 CartPole config —
+  ``legacy_perstep`` / ``fused_cold`` / ``fused_scan``, us per scan
+  iteration;
+* sweep: an L-point eta sweep × S seeds — ``sweep_perscenario`` (one
+  compile + dispatch per scenario, ``lanes=False``) vs ``sweep_lanes``
+  (one compiled lane-batched program per static signature). Each row
+  carries two timings: ``wall_us_per_scenario``, the cold end-to-end
+  sweep wall-clock per scenario *including* compiles (the quantity a
+  user sweeping scalars actually waits for, with ``compiles`` and the
+  lane row's ``cold_speedup_vs_perscenario``), and ``us_per_call``, the
+  warm re-run per scenario (execution + dispatch only). Only
+  ``us_per_call`` is gated by ``check_regress.py`` — compile time is
+  dominated by XLA/jaxlib version and machine, so gating the cold
+  number at 2× would flap on CI runners; the cold columns are the
+  recorded perf trajectory, not the gate.
+
+  PYTHONPATH=src python -m benchmarks.bench_engine [--smoke]
+
+``--smoke`` runs only the smallest sweep point with the same schema
+(flagged ``"smoke": true``) and writes the untracked
+``BENCH_engine_smoke.json``; the full baseline includes the smoke-sized
+point, so ``check_regress.py`` matches smoke rows by
+(name, env, K, T, L, S) key.
+"""
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+
+
+ETAS = (1e-3, 2e-3, 5e-3, 1e-2, 2e-2, 5e-2)
+SEEDS = (0, 1, 2, 3)
+
+# (env_spec, T, base config kwargs); the first entry is the smoke point
+SWEEP_SIZES = (
+    ("cartpole(horizon=20)", 5,
+     dict(K=3, n_byz=1, attack="large_noise(sigma=10)", N=4, B=2, kappa=2,
+          hidden=(8,))),
+    ("cartpole(horizon=100)", 10,
+     dict(K=13, n_byz=3, attack="large_noise(sigma=10)", N=20, B=4,
+          kappa=4, hidden=(16, 16))),
+)
+
+
+def _row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def measure_sweep(env_spec: str, T: int, base: dict) -> list:
+    """Run the eta sweep per-scenario and lane-batched — once from a
+    cold compiled-loop cache (compile-inclusive wall-clock, ungated) and
+    once warm (gated ``us_per_call``) — and return the two rows."""
+    from repro.core import engine
+    from repro.core.engine import ScenarioGrid, run_grid
+    from repro.rl.envs import make_env
+
+    env = make_env(env_spec)
+    grid = ScenarioGrid(seeds=SEEDS, axes={"eta": ETAS})
+    L, S = len(ETAS), len(SEEDS)
+    rows, cold_walls = [], {}
+    for lanes, name in ((False, "sweep_perscenario"),
+                        (True, "sweep_lanes")):
+        engine.clear_cache()
+        t0 = time.perf_counter()
+        res = run_grid(env, grid, T, algo="decbyzpg", lanes=lanes, **base)
+        cold = time.perf_counter() - t0
+        compiles = engine.compile_count()
+        t0 = time.perf_counter()
+        run_grid(env, grid, T, algo="decbyzpg", lanes=lanes, **base)
+        warm = time.perf_counter() - t0
+        finals = [res[scn]["final_return_mean"] for scn in res]
+        cold_walls[name] = cold
+        rows.append({
+            "name": name, "env": env_spec, "K": base["K"], "T": T,
+            "L": L, "S": S, "us_per_call": warm * 1e6 / L,
+            "wall_us_per_scenario": cold * 1e6 / L,
+            "compiles": compiles,
+        })
+        _row(f"engine_{name}_K{base['K']}_T{T}", warm * 1e6 / L,
+             f"L={L};S={S};compiles={compiles};"
+             f"cold_us_per_scenario={cold * 1e6 / L:.0f};"
+             f"final_returns={np.round(finals, 1).tolist()}")
+    speedup = (cold_walls["sweep_perscenario"]
+               / cold_walls["sweep_lanes"])
+    rows[-1]["cold_speedup_vs_perscenario"] = speedup
+    _row(f"engine_sweep_speedup_K{base['K']}_T{T}", 0.0,
+         f"cold_lanes_vs_perscenario={speedup:.1f}x")
+    return rows
+
+
+def measure_single() -> list:
+    """Historical fused-vs-legacy comparison on the fig1 K=13 config."""
+    from repro.core.decbyzpg import (DecByzPGConfig, run_decbyzpg,
+                                     run_decbyzpg_legacy)
+    from repro.rl.envs import make_env
+
+    env_spec = "cartpole(horizon=100)"
+    env = make_env(env_spec)
+    cfg = DecByzPGConfig(K=13, N=20, B=4, kappa=4, eta=2e-2, seed=0)
+    T = 15
+
+    run_decbyzpg_legacy(env, cfg, T)               # process warm-up
+    t0 = time.perf_counter()
+    out_l = run_decbyzpg_legacy(env, cfg, T)
+    legacy_us = (time.perf_counter() - t0) * 1e6 / T
+
+    t0 = time.perf_counter()
+    run_decbyzpg(env, cfg, T)                      # cold: includes compile
+    fused_cold_us = (time.perf_counter() - t0) * 1e6 / T
+    t0 = time.perf_counter()
+    out_f = run_decbyzpg(env, cfg, T)
+    fused_us = (time.perf_counter() - t0) * 1e6 / T
+
+    match = bool(np.allclose(out_f["returns"], out_l["returns"],
+                             atol=1e-4))
+    _row("bench_engine_legacy_perstep", legacy_us,
+         "per_iter_jit_dispatch+host_sync;rejit_per_call")
+    _row("bench_engine_fused_cold", fused_cold_us, "includes_compile")
+    _row("bench_engine_fused_scan", fused_us,
+         f"speedup_vs_legacy={legacy_us / fused_us:.1f}x;"
+         f"trace_matches_legacy={match}")
+    # legacy_perstep / fused_cold are compile-dominated (fresh jit per
+    # call resp. first compile): recorded as ungated wall_us_per_iter;
+    # only the warm fused_scan execution time carries the gated key
+    shared = {"env": env_spec, "K": cfg.K, "T": T}
+    return [
+        {"name": "legacy_perstep", "wall_us_per_iter": legacy_us,
+         **shared},
+        {"name": "fused_cold", "wall_us_per_iter": fused_cold_us,
+         **shared},
+        {"name": "fused_scan", "us_per_call": fused_us,
+         "speedup_vs_legacy": legacy_us / fused_us,
+         "trace_matches_legacy": match, **shared},
+    ]
+
+
+def run(smoke: bool = False) -> dict:
+    print("name,us_per_call,derived", flush=True)
+    rows = []
+    sizes = SWEEP_SIZES[:1] if smoke else SWEEP_SIZES
+    for env_spec, T, base in sizes:
+        rows += measure_sweep(env_spec, T, base)
+    if not smoke:
+        rows += measure_single()
+    doc = {"bench": "engine", "backend": jax.default_backend(),
+           "smoke": smoke, "etas": list(ETAS), "seeds": list(SEEDS),
+           "rows": rows}
+    # smoke runs get their own untracked file so a CI-sized run can't
+    # silently replace the tracked full baseline
+    name = "BENCH_engine_smoke.json" if smoke else "BENCH_engine.json"
+    path = os.path.join(os.path.dirname(__file__), name)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"# wrote {path}", flush=True)
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI run (smallest sweep point only)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -39,6 +39,10 @@ def row_key(doc: dict, row: dict) -> Optional[Tuple]:
         get = lambda k: row.get(k, doc.get(k))
         return (bench, row["topology"], get("K"), get("d"), get("kappa"),
                 get("n_byz"))
+    if bench == "engine":
+        # sweep rows carry (L, S); single-config rows leave them None
+        return (bench, row["name"], row.get("env"), row.get("K"),
+                row.get("T"), row.get("L"), row.get("S"))
     return None                       # unknown schema: never gates
 
 

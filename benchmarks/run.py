@@ -112,56 +112,12 @@ def fig5_byzpg_attacks():
 # ---------------------------------------------------------------------------
 
 def bench_engine():
-    """The tentpole comparison: one fused lax.scan program (compiled once,
-    cached) vs the legacy harness (Python T-loop, jit re-dispatch + host
-    sync every iteration, fresh jit per call — the pre-engine execution
-    model) on the fig1 K=13 CartPole config.  Besides the CSV rows, the
-    numbers are written to ``benchmarks/BENCH_engine.json`` so the perf
-    trajectory stays machine-readable across PRs."""
-    from repro.core.decbyzpg import (DecByzPGConfig, run_decbyzpg,
-                                     run_decbyzpg_legacy)
-    from repro.rl.envs import make_env
-    env = make_env(BENCH_ENV)
-    cfg = DecByzPGConfig(K=13, N=20, B=4, kappa=4, eta=2e-2, seed=0)
-    T = 15
-
-    run_decbyzpg_legacy(env, cfg, T)               # process warm-up
-    t0 = time.perf_counter()
-    out_l = run_decbyzpg_legacy(env, cfg, T)
-    legacy_us = (time.perf_counter() - t0) * 1e6 / T
-
-    t0 = time.perf_counter()
-    run_decbyzpg(env, cfg, T)                      # cold: includes compile
-    fused_cold_us = (time.perf_counter() - t0) * 1e6 / T
-    t0 = time.perf_counter()
-    out_f = run_decbyzpg(env, cfg, T)
-    fused_us = (time.perf_counter() - t0) * 1e6 / T
-
-    match = np.allclose(out_f["returns"], out_l["returns"], atol=1e-4)
-    _row("bench_engine_legacy_perstep", legacy_us,
-         "per_iter_jit_dispatch+host_sync;rejit_per_call")
-    _row("bench_engine_fused_cold", fused_cold_us, "includes_compile")
-    _row("bench_engine_fused_scan", fused_us,
-         f"speedup_vs_legacy={legacy_us / fused_us:.1f}x;"
-         f"trace_matches_legacy={match}")
-    path = os.path.join(os.path.dirname(__file__), "BENCH_engine.json")
-    with open(path, "w") as f:
-        json.dump({
-            "bench": "engine",
-            "backend": jax.default_backend(),
-            "env": BENCH_ENV,
-            "T": T,
-            "config": {"K": cfg.K, "N": cfg.N, "B": cfg.B,
-                       "kappa": cfg.kappa, "eta": cfg.eta,
-                       "aggregator": cfg.aggregator.canonical(),
-                       "agreement": cfg.agreement.canonical()},
-            "legacy_us_per_iter": legacy_us,
-            "fused_cold_us_per_iter": fused_cold_us,
-            "fused_us_per_iter": fused_us,
-            "speedup_vs_legacy": legacy_us / fused_us,
-            "trace_matches_legacy": bool(match),
-        }, f, indent=2)
-    print(f"# wrote {path}", flush=True)
+    """Fused-scan vs legacy dispatch, plus the lane-batched sweep vs the
+    per-scenario loop; writes ``benchmarks/BENCH_engine.json`` (full
+    ladder lives in ``benchmarks/bench_engine.py``, which also has a
+    ``--smoke`` CLI for the CI-sized sweep point)."""
+    from benchmarks.bench_engine import run as run_engine
+    run_engine()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,63 @@
+"""Resilience across attack strengths (paper Fig. 3 analogue), as a
+lane-batched sweep.
+
+DecByzPG vs the naive Dec-PAGE-PG baseline over a ladder of LargeNoise
+sigmas. ``sigma`` is a *traced* attack kwarg (the attack factory marks it
+batchable), so each aggregator arm — all its sigma points × all seeds —
+runs as ONE compiled lane-batched program (DESIGN.md §2): 2 compiles for
+the whole figure instead of 2 × len(sigmas).
+
+  PYTHONPATH=src python examples/attack_strength_sweep.py \
+      [--iters 40] [--seeds 3] [--sigmas 1,10,50,100,200]
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import engine
+from repro.core.engine import Experiment
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=40)
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--sigmas", default="1,10,50,100,200")
+    args = ap.parse_args()
+    sigmas = tuple(float(s) for s in args.sigmas.split(","))
+
+    exp = Experiment(
+        algo="decbyzpg", env="cartpole(horizon=200)", T=args.iters,
+        seeds=args.seeds,
+        axes={"attack": tuple(f"large_noise(sigma={s})" for s in sigmas),
+              "aggregator": ("rfa", "mean")},
+        K=13, n_byz=3, N=20, B=4, eta=2e-2,
+        override=lambda c: dataclasses.replace(
+            c, kappa=0 if c.aggregator.name == "mean" else 5))
+    engine.clear_cache()
+    res = exp.run()
+    n_programs = engine.compile_count()
+
+    print(f"== LargeNoise strength sweep, 3/13 Byzantine, "
+          f"{args.seeds} seeds; {len(res)} scenarios in "
+          f"{n_programs} compiled programs ==")
+    print(f"{'sigma':>8s} {'DecByzPG (rfa)':>18s} "
+          f"{'Dec-PAGE-PG (mean)':>20s}")
+    for s in sigmas:
+        robust = res.sel(attack=f"large_noise(sigma={s})",
+                         aggregator="rfa")
+        naive = res.sel(attack=f"large_noise(sigma={s})",
+                        aggregator="mean")
+        print(f"{s:8.0f} "
+              f"{robust['final_return_mean']:9.1f}"
+              f"±{robust['final_return_ci95']:<7.1f} "
+              f"{naive['final_return_mean']:11.1f}"
+              f"±{naive['final_return_ci95']:<7.1f}")
+    print("\nDecByzPG holds its return as sigma grows; the naive mean "
+          "baseline degrades (the paper's Fig. 3 phenomenon).")
+
+
+if __name__ == "__main__":
+    main()

@@ -71,17 +71,22 @@ register("attack", "none")(lambda: none_attack)
 register("attack", "avg_zero")(lambda: avg_zero)
 
 
-@register("attack", "large_noise")
+# ``traced_kwargs`` marks kwargs that are pure numeric multipliers inside
+# the attack body: the engine's lane batching (DESIGN.md §2) strips them
+# from the static spec and feeds them to the compiled program as data, so
+# e.g. a sigma sweep of large_noise compiles once instead of per-point.
+
+@register("attack", "large_noise", traced_kwargs=("sigma",))
 def _large_noise_factory(sigma: float = 100.0):
     return functools.partial(large_noise, sigma=sigma)
 
 
-@register("attack", "sign_flip")
+@register("attack", "sign_flip", traced_kwargs=("scale",))
 def _sign_flip_factory(scale: float = 3.0):
     return functools.partial(sign_flip, scale=scale)
 
 
-@register("attack", "alie")
+@register("attack", "alie", traced_kwargs=("z",))
 def _alie_factory(z: float = 1.5):
     return functools.partial(alie, z=z)
 

@@ -35,7 +35,7 @@ import numpy as np
 from repro.core import attacks as attacks_lib
 from repro.core import engine
 from repro.core.aggregators import get_aggregator
-from repro.core.registry import normalize_spec_fields, register
+from repro.core.registry import normalize_spec_fields, register, resolve
 from repro.core.tree import ravel
 from repro.optim.optimizers import get_optimizer
 from repro.rl.gradient import grad_estimate, weighted_grad_estimate
@@ -82,14 +82,24 @@ def init_byzpg_carry(env, cfg: ByzPGConfig, k_init):
     return vec0, jnp.array(vec0), jnp.zeros_like(vec0), opt_state
 
 
-def build_byzpg_step(env, cfg: ByzPGConfig):
-    """One fixed-shape iteration ``step(carry, (t, key), coin_key)``."""
+def build_byzpg_step(env, cfg: ByzPGConfig, traced=None):
+    """One fixed-shape iteration ``step(carry, (t, key), coin_key)``.
+
+    ``traced`` maps lane-traced scalar names (see
+    :func:`repro.core.decbyzpg.build_decbyzpg_step`) to array operands
+    overriding the config's baked-in floats.
+    """
+    eta = engine.traced_value(traced, "eta", cfg.eta)
+    gamma = engine.traced_value(traced, "gamma", cfg.gamma)
+    baseline = engine.traced_value(traced, "baseline", cfg.baseline)
+    switch_p = engine.traced_value(traced, "switch_p", cfg.switch_p)
     unravel, _ = mlp_unraveler(env, cfg.hidden)
     byz_mask = jnp.asarray(np.arange(cfg.K) < cfg.n_byz)
     env_level = attacks_lib.is_env_level(cfg.attack)
-    attack = attacks_lib.get_attack(cfg.attack)
+    attack = resolve("attack", cfg.attack,
+                     **engine.traced_spec_kwargs(traced, "attack"))
     agg = get_aggregator(cfg.aggregator, cfg.K, cfg.n_byz)
-    opt = _optimizer(cfg)
+    opt = get_optimizer(cfg.optimizer, eta)
     scales = jnp.where(byz_mask & env_level, 0.0, 1.0)
 
     M = max(cfg.N, cfg.B)
@@ -101,7 +111,7 @@ def build_byzpg_step(env, cfg: ByzPGConfig):
     def step(carry, xs, coin_key):
         vec, prev_vec, v_prev, opt_state = carry
         t, key = xs
-        coin = engine.page_coin(coin_key, t, cfg.switch_p)
+        coin = engine.page_coin(coin_key, t, switch_p)
         w = jnp.where(coin, w_large, w_small)
         k_traj, k_att, k_agg = jax.random.split(key, 3)
         params = unravel(vec)
@@ -110,11 +120,11 @@ def build_byzpg_step(env, cfg: ByzPGConfig):
         def one(k, scale):
             traj = sample_batch(env, params, k, M, cfg.activation,
                                 logit_scale=scale)
-            g = ravel(grad_estimate(params, traj, cfg.gamma, cfg.baseline,
+            g = ravel(grad_estimate(params, traj, gamma, baseline,
                                     cfg.estimator, cfg.activation,
                                     sample_weights=w))[0]
             g_old = ravel(weighted_grad_estimate(
-                prev, params, traj, cfg.gamma, cfg.baseline,
+                prev, params, traj, gamma, baseline,
                 cfg.estimator, cfg.activation,
                 sample_weights=w_small))[0]
             return g, g_old, jnp.sum(w * batch_return(traj))
@@ -136,9 +146,9 @@ def build_byzpg_step(env, cfg: ByzPGConfig):
     return step
 
 
-def build_byzpg_loop(env, cfg: ByzPGConfig, T: int):
+def build_byzpg_loop(env, cfg: ByzPGConfig, T: int, traced=None):
     """Pure fused loop: one ``lax.scan`` over T iterations."""
-    step = build_byzpg_step(env, cfg)
+    step = build_byzpg_step(env, cfg, traced)
 
     def loop(vec0, prev_vec0, v0, opt_state0, step_keys, coin_key):
         (vec, _, _, _), (rets, coins) = jax.lax.scan(
@@ -199,4 +209,5 @@ def run_byzpg_legacy(env, cfg: ByzPGConfig, T: int, eval_every: int = 1):
 
 register("algo", "byzpg")(lambda: engine.AlgoDef(
     ByzPGConfig, build_byzpg_loop, init_byzpg_carry,
-    run_byzpg, run_byzpg_legacy))
+    run_byzpg, run_byzpg_legacy,
+    traced_fields=("eta", "gamma", "baseline", "switch_p")))

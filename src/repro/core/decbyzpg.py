@@ -36,7 +36,7 @@ from repro.core import attacks as attacks_lib
 from repro.core import engine
 from repro.core.agreement import avg_agree, honest_diameter
 from repro.core.aggregators import get_aggregator
-from repro.core.registry import normalize_spec_fields, register
+from repro.core.registry import normalize_spec_fields, register, resolve
 from repro.core.tree import ravel
 from repro.optim.optimizers import get_optimizer
 from repro.rl.gradient import grad_estimate, weighted_grad_estimate
@@ -93,23 +93,35 @@ def init_decbyzpg_carry(env, cfg: DecByzPGConfig, k_init):
     return theta0, jnp.array(theta0), opt0
 
 
-def build_decbyzpg_step(env, cfg: DecByzPGConfig):
+def build_decbyzpg_step(env, cfg: DecByzPGConfig, traced=None):
     """One fixed-shape iteration ``step(carry, (t, key), coin_key)``.
 
     Both coin branches run through the same compiled body: every agent
     samples max(N, B) trajectories and the estimator weights select the
     first N (large) or first B (small PAGE) of them, so there is exactly
     one program regardless of the coin.
+
+    ``traced`` (lane batching, DESIGN.md §2) maps traced scalar names —
+    the ``traced_fields`` registered for this algorithm plus batchable
+    attack kwargs as ``"attack.<kwarg>"`` — to array operands that
+    override the config's baked-in Python floats, so one compiled program
+    serves every lane of a scalar sweep. ``None`` keeps the historical
+    constant-folding behavior.
     """
+    eta = engine.traced_value(traced, "eta", cfg.eta)
+    gamma = engine.traced_value(traced, "gamma", cfg.gamma)
+    baseline = engine.traced_value(traced, "baseline", cfg.baseline)
+    switch_p = engine.traced_value(traced, "switch_p", cfg.switch_p)
     unravel, _ = mlp_unraveler(env, cfg.hidden)
     byz_mask = jnp.asarray(np.arange(cfg.K) < cfg.n_byz)
     env_level = attacks_lib.is_env_level(cfg.attack)
-    attack = attacks_lib.get_attack(cfg.attack)
+    attack = resolve("attack", cfg.attack,
+                     **engine.traced_spec_kwargs(traced, "attack"))
     agr_attack = (attacks_lib.per_receiver(attack, cfg.K)
                   if cfg.per_receiver else attack)
     agg = get_aggregator(cfg.aggregator, cfg.K, cfg.n_byz)
     scales = jnp.where(byz_mask & env_level, 0.0, 1.0)
-    opt = _optimizer(cfg)
+    opt = get_optimizer(cfg.optimizer, eta)
     topo = resolve_topology(cfg.topology, cfg.K)
 
     M = max(cfg.N, cfg.B)
@@ -122,26 +134,26 @@ def build_decbyzpg_step(env, cfg: DecByzPGConfig):
         prev = unravel(theta_prev_vec)
         traj = sample_batch(env, params, key, M, cfg.activation,
                             logit_scale=scale)
-        g = ravel(grad_estimate(params, traj, cfg.gamma, cfg.baseline,
+        g = ravel(grad_estimate(params, traj, gamma, baseline,
                                 cfg.estimator, cfg.activation,
                                 sample_weights=w))[0]
         # IS-corrected estimate at θ_prev on the small-batch slice; masked
         # out on large steps by the coin select below.
         g_old = ravel(weighted_grad_estimate(
-            prev, params, traj, cfg.gamma, cfg.baseline,
+            prev, params, traj, gamma, baseline,
             cfg.estimator, cfg.activation, sample_weights=w_small))[0]
         return g, g_old, jnp.sum(w * batch_return(traj))
 
     def step(carry, xs, coin_key):
         theta, theta_prev, opt_state = carry  # theta: (K, d)
         t, key = xs
-        coin = engine.page_coin(coin_key, t, cfg.switch_p)
+        coin = engine.page_coin(coin_key, t, switch_p)
         w = jnp.where(coin, w_large, w_small)
         k_traj, k_att, k_agg, k_agr = jax.random.split(key, 4)
         g, g_old, rets = jax.vmap(
             lambda tv, tp, k, s: agent_estimate(tv, tp, k, w, s)
         )(theta, theta_prev, jax.random.split(k_traj, cfg.K), scales)
-        page = (theta - theta_prev) / cfg.eta - g_old
+        page = (theta - theta_prev) / eta - g_old
         tilde_v = jnp.where(coin, g, g + page)
         msgs = attack(tilde_v, byz_mask, k_att)
         # every agent aggregates the same broadcast set (v^(k));
@@ -163,10 +175,10 @@ def build_decbyzpg_step(env, cfg: DecByzPGConfig):
     return step
 
 
-def build_decbyzpg_loop(env, cfg: DecByzPGConfig, T: int):
+def build_decbyzpg_loop(env, cfg: DecByzPGConfig, T: int, traced=None):
     """Pure fused loop: one ``lax.scan`` over T iterations returning
     stacked on-device histories (no per-step host traffic)."""
-    step = build_decbyzpg_step(env, cfg)
+    step = build_decbyzpg_step(env, cfg, traced)
 
     def loop(theta0, theta_prev0, opt0, step_keys, coin_key):
         (theta, _, _), (rets, coins, diams) = jax.lax.scan(
@@ -235,4 +247,5 @@ def run_decbyzpg_legacy(env, cfg: DecByzPGConfig, T: int):
 
 register("algo", "decbyzpg")(lambda: engine.AlgoDef(
     DecByzPGConfig, build_decbyzpg_loop, init_decbyzpg_carry,
-    run_decbyzpg, run_decbyzpg_legacy))
+    run_decbyzpg, run_decbyzpg_legacy,
+    traced_fields=("eta", "gamma", "baseline", "switch_p")))

@@ -87,6 +87,12 @@ def clear_cache() -> None:
     _COMPILED.clear()
 
 
+def compile_count() -> int:
+    """Number of cached compiled programs (one per static signature) —
+    the stable surface for benchmarks/tests asserting compile counts."""
+    return len(_COMPILED)
+
+
 def static_key(cfg):
     """Config hashed without its seed (seeds are data, not program)."""
     return dataclasses.replace(cfg, seed=0)
@@ -106,16 +112,77 @@ def donate_args(*argnums):
 class AlgoDef(NamedTuple):
     """What the engine needs from an algorithm: its config dataclass, the
     fused-loop/carry builders, and the single-run entry points. Algorithm
-    modules register one under ``register("algo", name)``."""
+    modules register one under ``register("algo", name)``.
+
+    ``traced_fields`` names the config scalars the algorithm's builders
+    accept as *traced operands* (via their ``traced=`` mapping) instead of
+    baked-in Python constants — the static/traced split behind lane
+    batching.  Entries may be derived properties (``switch_p``); only
+    real dataclass fields are blanked in the static representative."""
     config_cls: type
     build_loop: Callable
     init_carry: Callable
     run: Callable
     run_legacy: Callable
+    traced_fields: Tuple[str, ...] = ()
 
 
 def _algo(name) -> AlgoDef:
     return resolve("algo", name)
+
+
+# ---------------------------------------------------------------------------
+# Static/traced config split (lane batching)
+# ---------------------------------------------------------------------------
+
+
+def traced_value(traced, name: str, default):
+    """The traced operand for ``name`` when lane batching supplies one,
+    else the config's plain value (builders call this for every scalar in
+    their algorithm's ``traced_fields``)."""
+    if traced is None:
+        return default
+    return traced.get(name, default)
+
+
+def traced_spec_kwargs(traced, namespace: str) -> dict:
+    """Traced component kwargs for ``namespace`` (stored under
+    ``"<namespace>.<kwarg>"``), ready to pass as ``resolve`` context so a
+    factory receives them as array operands."""
+    prefix = namespace + "."
+    return {k[len(prefix):]: v for k, v in (traced or {}).items()
+            if k.startswith(prefix)}
+
+
+def lane_split(cfg, traced_fields):
+    """Split a config into ``(static_cfg, traced_names, traced_values)``.
+
+    ``static_cfg`` is the *lane-group representative*: the config with its
+    seed zeroed, every traced dataclass field blanked, and batchable
+    attack kwargs stripped from the attack Spec — two scenarios that
+    differ only in traced scalars map to the same (hashable) static
+    representative and therefore share one compiled program.
+    ``traced_names``/``traced_values`` are the matching flat operand
+    vector: the algorithm's ``traced_fields`` (derived properties like
+    ``switch_p`` read but not blanked) followed by the attack's
+    traced-marked kwargs as ``"attack.<kwarg>"``.
+    """
+    from repro.core.registry import REGISTRY
+    traced = {name: float(getattr(cfg, name)) for name in traced_fields}
+    fields = {f.name for f in dataclasses.fields(cfg)}
+    repl = {name: 0.0 for name in traced_fields if name in fields}
+    if "switch_p" in traced and "p" in fields:
+        # p reaches the program only through the traced switch_p, so
+        # p=None (default B/N) and an explicit equal p share a signature
+        repl["p"] = None
+    if "attack" in fields:
+        static_attack, att = REGISTRY.split_traced("attack", cfg.attack)
+        repl["attack"] = static_attack
+        for k, v in sorted(att.items()):
+            traced[f"attack.{k}"] = v
+    static_cfg = dataclasses.replace(cfg, seed=0, **repl)
+    names = tuple(traced)
+    return static_cfg, names, tuple(traced[n] for n in names)
 
 
 # ---------------------------------------------------------------------------
@@ -220,6 +287,48 @@ def seed_batch_loop(env, cfg, T: int, n_seeds: int, algo="decbyzpg"):
     return compiled(key, build)
 
 
+def lane_batch_loop(env, static_cfg, T: int, traced_names, n_rows: int,
+                    algo="decbyzpg"):
+    """Compiled flattened lane×seed batch: ``(vals (R, n_traced), seeds
+    (R,) int32) -> history dict`` with leading axis R = lanes × seeds.
+
+    One program serves every scenario that shares ``static_cfg``'s static
+    signature: each row derives its own PRNG streams from its seed and
+    overrides the traced scalars (eta, gamma, switch_p, batchable attack
+    kwargs, ...) with its slice of ``vals``, so an L-point scalar sweep ×
+    S seeds is a single compile and a single dispatch. The flattened
+    batch axis is sharded over the local ``lane_mesh`` when the row count
+    divides the device count (single device: identity layout).
+    """
+    from repro.distributed.sharding import lane_mesh, lane_sharding
+    algo = Spec.of(algo)
+    a = _algo(algo)
+    names = tuple(traced_names)
+    mesh = lane_mesh()
+    sharding = lane_sharding(mesh, n_rows)
+    key = ("lanes", algo, env.name, env.horizon, static_key(static_cfg),
+           names, T, n_rows, None if sharding is None else mesh.size)
+
+    def build():
+        def one(vals, seed):
+            # an algorithm with no traced fields keeps the historical
+            # build_loop(env, cfg, T) contract — don't pass traced=
+            loop = a.build_loop(env, static_cfg, T,
+                                traced=dict(zip(names, vals))) \
+                if names else a.build_loop(env, static_cfg, T)
+            ks = seed_keys(seed)
+            carry = a.init_carry(env, static_cfg, ks.init)
+            return loop(*carry, jax.random.split(ks.loop, T), ks.coin)
+
+        batched = jax.vmap(one)
+        if sharding is None:
+            return jax.jit(batched)
+        return jax.jit(batched, in_shardings=(sharding, sharding),
+                       out_shardings=sharding)
+
+    return compiled(key, build)
+
+
 def summarize(hist: dict, cfg) -> dict:
     """Host-side statistics for one scenario's (S, T) seed batch."""
     out = {k: np.asarray(v) for k, v in hist.items()}
@@ -257,7 +366,8 @@ def _check_override(cfg_before, cfg_after, assign: dict) -> None:
 
 
 def run_grid(env, grid: ScenarioGrid, T: int, algo="decbyzpg",
-             override: Optional[Callable] = None, **base) -> dict:
+             override: Optional[Callable] = None, lanes: bool = True,
+             **base) -> dict:
     """Run every scenario in ``grid`` for ``T`` iterations.
 
     ``base`` sets non-axis config fields (N, B, eta, kappa, ...);
@@ -267,8 +377,17 @@ def run_grid(env, grid: ScenarioGrid, T: int, algo="decbyzpg",
     silently diverge from its Scenario key. Returns ``{Scenario: summary
     dict}`` with per-seed histories plus mean ± 95% CI curves, keyed by
     the grid's keyed tuple over its axis names.
+
+    With ``lanes=True`` (default) scenarios are grouped by static
+    signature (:func:`lane_split`) and each group runs as **one** compiled
+    lane-batched program over the flattened lane×seed batch — an L-point
+    scalar sweep (eta, gamma, a batchable attack sigma, ...) is one
+    compile and one dispatch instead of L. ``lanes=False`` keeps the
+    historical per-scenario dispatch (one :func:`seed_batch_loop` per
+    combination) — the baseline ``bench_engine`` measures against.
     """
-    cfg_cls = _algo(algo).config_cls
+    a = _algo(algo)
+    cfg_cls = a.config_cls
     fields = {f.name for f in dataclasses.fields(cfg_cls)}
     axes = grid.resolved_axes()
     # legacy-default axes a config doesn't know (e.g. "agreement" for
@@ -290,7 +409,7 @@ def run_grid(env, grid: ScenarioGrid, T: int, algo="decbyzpg",
         axes[n] = (base.pop(n),)
     key_cls = scenario_key(axes)
     seeds = jnp.asarray(grid.seeds, jnp.int32)
-    results = {}
+    scenarios = []
     for combo in itertools.product(*axes.values()):
         assign = {k: v for k, v in zip(axes, combo) if k in fields}
         cfg = cfg_cls(**{**base, **assign})
@@ -298,15 +417,59 @@ def run_grid(env, grid: ScenarioGrid, T: int, algo="decbyzpg",
             cfg2 = override(cfg)
             _check_override(cfg, cfg2, assign)
             cfg = cfg2
-        loop = seed_batch_loop(env, cfg, T, len(grid.seeds), algo)
-        hist = jax.block_until_ready(loop(seeds))
-        results[key_cls(*combo)] = summarize(hist, cfg)
-    return results
+        scenarios.append((key_cls(*combo), cfg))
+    if not lanes:
+        results = {}
+        for scn, cfg in scenarios:
+            loop = seed_batch_loop(env, cfg, T, len(grid.seeds), algo)
+            hist = jax.block_until_ready(loop(seeds))
+            results[scn] = summarize(hist, cfg)
+        return results
+    # group scenario lanes by static signature: scalar-only axes collapse
+    # into one compiled program per group, seeds stay vmapped inside
+    groups: dict = {}
+    for scn, cfg in scenarios:
+        static_cfg, names, vals = lane_split(cfg, a.traced_fields)
+        groups.setdefault((static_cfg, names), []).append((scn, cfg, vals))
+    S = len(grid.seeds)
+    results = {}
+    for (static_cfg, names), members in groups.items():
+        L = len(members)
+        loop = lane_batch_loop(env, static_cfg, T, names, L * S, algo)
+        # float64 host-side, canonicalized by jnp.asarray to the ambient
+        # float dtype (f32 by default, f64 under jax_enable_x64) so the
+        # operands match what lanes=False bakes in as Python constants
+        vals = np.asarray([m[2] for m in members], np.float64)
+        vals_flat = jnp.asarray(np.repeat(vals, S, axis=0))   # (L*S, n)
+        seeds_flat = jnp.tile(seeds, L)
+        hist = jax.block_until_ready(loop(vals_flat, seeds_flat))
+        for i, (scn, cfg, _) in enumerate(members):
+            lane = {k: v[i * S:(i + 1) * S] for k, v in hist.items()}
+            results[scn] = summarize(lane, cfg)
+    return {scn: results[scn] for scn, _ in scenarios}
 
 
 # ---------------------------------------------------------------------------
 # Declarative Experiment API
 # ---------------------------------------------------------------------------
+
+
+def _axis_str(v) -> str:
+    """Canonical display form of one scenario-axis value."""
+    return v.canonical() if isinstance(v, Spec) else str(v)
+
+
+def _axis_eq(a, b) -> bool:
+    """Axis-value equality with Spec/string interchangeability: a Spec
+    matches its spec string (and vice versa)."""
+    if a == b:
+        return True
+    if isinstance(a, Spec) or isinstance(b, Spec):
+        try:
+            return Spec.of(a) == Spec.of(b)
+        except Exception:
+            return False
+    return False
 
 
 class ExperimentResult:
@@ -336,24 +499,43 @@ class ExperimentResult:
 
     def sel(self, **axes):
         """The unique scenario matching the given axis values, e.g.
-        ``res.sel(aggregator="rfa")``."""
-        names = set(self.axes)
-        bad = set(axes) - names
+        ``res.sel(aggregator="rfa")``. Spec-valued axes match their
+        string/canonical forms interchangeably. Under-specified queries
+        raise a ``KeyError`` naming the still-free axes (and their
+        values) instead of dumping every scenario tuple."""
+        names = list(self.axes)
+        bad = set(axes) - set(names)
         if bad:
             raise KeyError(f"{sorted(bad)} are not sweep axes of this "
                            f"experiment; axes: {sorted(names)}")
         matches = [s for s in self.results
-                   if all(getattr(s, k) == v for k, v in axes.items())]
-        if len(matches) != 1:
-            raise KeyError(f"{axes} matches {len(matches)} scenarios "
-                           f"(need exactly 1) of {list(self.results)}")
-        return self.results[matches[0]]
+                   if all(_axis_eq(getattr(s, k), v)
+                          for k, v in axes.items())]
+        if len(matches) == 1:
+            return self.results[matches[0]]
+        query = ", ".join(f"{k}={_axis_str(v)}" for k, v in axes.items())
+        if not matches:
+            raise KeyError(
+                f"sel({query}) matches no scenario; axis values: "
+                + "; ".join(f"{k} in {[_axis_str(v) for v in vals]}"
+                            for k, vals in self.axes.items()))
+        free = [k for k in names if k not in axes and
+                len({_axis_str(getattr(s, k)) for s in matches}) > 1]
+        raise KeyError(
+            f"sel({query}) is under-specified: {len(matches)} scenarios "
+            f"match; also constrain the free axis(es) "
+            + "; ".join(f"{k} in {sorted({_axis_str(getattr(s, k)) for s in matches})}"
+                        for k in free))
 
     @staticmethod
     def scenario_name(scn) -> str:
+        """Stable ``"axis=value,..."`` name: Spec-valued entries render as
+        their canonical spec string, so the name is identical whether the
+        axis value was given as a Spec or its string form."""
         if not scn:
             return "base"
-        return ",".join(f"{k}={v}" for k, v in zip(scn._fields, scn))
+        return ",".join(f"{k}={_axis_str(v)}"
+                        for k, v in zip(scn._fields, scn))
 
     def summary(self) -> dict:
         """Compact per-scenario statistics keyed by ``"axis=value,..."``."""
@@ -417,7 +599,8 @@ class Experiment:
 
     def __init__(self, algo="decbyzpg", env="cartpole", T: int = 50,
                  seeds=(0, 1, 2), axes: Optional[Mapping] = None,
-                 override: Optional[Callable] = None, **base):
+                 override: Optional[Callable] = None, lanes: bool = True,
+                 **base):
         self.algo = Spec.of(algo)
         self.env_spec = env
         self.T = int(T)
@@ -425,6 +608,7 @@ class Experiment:
             else tuple(seeds)
         self.axes = {k: _as_axis(v) for k, v in dict(axes or {}).items()}
         self.override = override
+        self.lanes = lanes
         self.base = base
         self._result: Optional[ExperimentResult] = None
 
@@ -442,7 +626,8 @@ class Experiment:
         env = self.env
         grid = ScenarioGrid(seeds=self.seeds, axes=self.axes)
         results = run_grid(env, grid, self.T, algo=self.algo,
-                           override=self.override, **self.base)
+                           override=self.override, lanes=self.lanes,
+                           **self.base)
         meta = {"algo": self.algo.canonical(),
                 "env": (Spec.of(self.env_spec).canonical()
                         if isinstance(self.env_spec, (str, Spec))

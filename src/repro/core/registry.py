@@ -249,6 +249,40 @@ class Registry:
         self._factory(namespace, name)          # raises on unknown
         return self._meta[(namespace, name)]
 
+    def split_traced(self, namespace: str, spec):
+        """Split ``spec`` into its static program shape and its traced
+        scalar operands (DESIGN.md §2, lane batching).
+
+        A factory registered with ``traced_kwargs=("sigma", ...)`` marks
+        those kwargs as *batchable*: pure numeric multipliers that can be
+        fed to the compiled program as data instead of being baked into
+        its shape. Returns ``(static_spec, traced)`` where ``static_spec``
+        has every traced kwarg stripped and ``traced`` maps each traced
+        kwarg name to its float value — the spec's explicit value when
+        given, else the factory's default — so every spec of the same
+        component normalizes to the same static signature and the same
+        traced-name set regardless of which kwargs were spelled out.
+        Non-numeric (or bool) values for a traced-marked kwarg stay
+        static.
+        """
+        spec = Spec.of(spec)
+        marked = self.meta(namespace, spec).get("traced_kwargs", ())
+        if not marked:
+            return spec, {}
+        factory = self._factory(namespace, spec.name)
+        defaults = {n: p.default
+                    for n, p in inspect.signature(factory).parameters.items()
+                    if p.default is not inspect.Parameter.empty}
+        kwargs = dict(spec.kwargs)
+        traced = {}
+        for name in marked:
+            value = kwargs.get(name, defaults.get(name))
+            if isinstance(value, (int, float)) \
+                    and not isinstance(value, bool):
+                traced[name] = float(value)
+                kwargs.pop(name, None)
+        return Spec(spec.name, **kwargs), traced
+
     def _factory(self, namespace: str, name: str) -> Callable:
         self._ensure_loaded(namespace)
         try:
@@ -289,6 +323,7 @@ class Registry:
 REGISTRY = Registry()
 register = REGISTRY.register
 resolve = REGISTRY.resolve
+split_traced = REGISTRY.split_traced
 
 
 def normalize_spec_fields(cfg, fields) -> None:

@@ -17,9 +17,36 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Lane mesh: 1-D data-parallel layout for the engine's scenario sweeps
+# ---------------------------------------------------------------------------
+
+
+def lane_mesh(devices=None) -> Optional[Mesh]:
+    """1-D ``("lane",)`` mesh over the local devices, used by the engine
+    to spread a flattened lane×seed scenario batch (DESIGN.md §2).
+    Returns None on a single device — the identity layout, so CPU tests
+    and single-chip runs skip sharding entirely."""
+    devs = list(jax.local_devices()) if devices is None else list(devices)
+    if len(devs) <= 1:
+        return None
+    return Mesh(np.asarray(devs), ("lane",))
+
+
+def lane_sharding(mesh: Optional[Mesh], n_rows: int) \
+        -> Optional[NamedSharding]:
+    """NamedSharding splitting a leading batch axis of size ``n_rows``
+    over the lane mesh; None (replicate — the identity layout) without a
+    mesh or when the batch does not divide the device count evenly."""
+    if mesh is None or n_rows % mesh.size != 0:
+        return None
+    return NamedSharding(mesh, P("lane"))
 
 # leaf name -> trailing dim that gets the "model" axis
 _MODEL_LAST = {"wq", "wk", "wv", "w_gate", "w_up", "bq", "bk", "bv",

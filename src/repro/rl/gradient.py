@@ -83,11 +83,25 @@ def importance_weights(params_old, params_new, traj: Trajectory,
 def weighted_grad_estimate(params_old, params_new, traj: Trajectory,
                            gamma: float, baseline: float = 0.0,
                            estimator: str = "gpomdp", activation="tanh",
-                           sample_weights=None):
+                           sample_weights=None,
+                           self_normalized: bool = False):
     """(1/M) Σ_i g^{ω_θnew}(τ_i | θ_old): IS-corrected PG at θ_old from
     trajectories sampled at θ_new. ``sample_weights`` as in
-    :func:`grad_estimate`."""
+    :func:`grad_estimate`.
+
+    ``self_normalized=True`` divides by the realized weight mass
+    (Σ w_i s_i / Σ w_i instead of (1/M) Σ w_i s_i): the classic
+    self-normalized IS estimator — biased O(1/M) but consistent, with
+    much lower variance when the weights are spread out. The PAGE
+    correction keeps the plain (unbiased) form per Assumption 5; the
+    normalizer is treated as a constant (not differentiated), matching
+    the non-differentiated weights.
+    """
     w = importance_weights(params_old, params_new, traj, activation)
+    if self_normalized:
+        mass = jnp.sum(sample_weights * w) if sample_weights is not None \
+            else jnp.mean(w)
+        w = w / jnp.maximum(mass, 1e-12)
     sur = _surrogate(estimator)
 
     def loss(p):

@@ -77,6 +77,41 @@ def test_differently_sized_topology_runs_never_alias(tmp_path):
     assert main(argv) == 0                         # keys differ -> skipped
 
 
+def _engine_doc(rows):
+    return {"bench": "engine", "smoke": False, "rows": rows}
+
+
+def test_engine_sweep_rows_gated(tmp_path):
+    """The engine schema keys rows by (name, env, K, T, L, S), so a smoke
+    sweep gates against the matching full-baseline point and the
+    differently-sized point never aliases."""
+    base = _engine_doc([
+        {"name": "sweep_lanes", "env": "cartpole(horizon=20)", "K": 3,
+         "T": 5, "L": 6, "S": 4, "us_per_call": 1e5},
+        {"name": "sweep_lanes", "env": "cartpole(horizon=100)", "K": 13,
+         "T": 10, "L": 6, "S": 4, "us_per_call": 5e6},
+    ])
+    cur_ok = _engine_doc([
+        {"name": "sweep_lanes", "env": "cartpole(horizon=20)", "K": 3,
+         "T": 5, "L": 6, "S": 4, "us_per_call": 1.5e5}])
+    argv = ["--pair", f"{_write(tmp_path, 'c.json', cur_ok)}:"
+            f"{_write(tmp_path, 'b.json', base)}"]
+    assert main(argv) == 0
+    cur_bad = _engine_doc([
+        {"name": "sweep_lanes", "env": "cartpole(horizon=20)", "K": 3,
+         "T": 5, "L": 6, "S": 4, "us_per_call": 2.5e5}])   # 2.5x
+    argv = ["--pair", f"{_write(tmp_path, 'c2.json', cur_bad)}:"
+            f"{_write(tmp_path, 'b.json', base)}"]
+    assert main(argv) == 1
+    # same name at a different sweep size: keys differ -> skipped
+    cur_other = _engine_doc([
+        {"name": "sweep_lanes", "env": "cartpole(horizon=20)", "K": 3,
+         "T": 5, "L": 2, "S": 2, "us_per_call": 1e9}])
+    argv = ["--pair", f"{_write(tmp_path, 'c3.json', cur_other)}:"
+            f"{_write(tmp_path, 'b.json', base)}"]
+    assert main(argv) == 0
+
+
 def test_pair_argument_validation(tmp_path):
     with pytest.raises(SystemExit):
         main([])

@@ -66,6 +66,7 @@ def _grid(seeds=(0, 1, 2)):
 
 
 GRID_KW = dict(N=4, B=2, eta=1e-2, kappa=2, hidden=(8,))
+GRID_KW_NOETA = dict(N=4, B=2, kappa=2, hidden=(8,))
 
 
 def test_run_grid_shapes():
@@ -92,9 +93,9 @@ def test_run_grid_shapes():
 
 def test_run_grid_deterministic_and_cached():
     a = run_grid(ENV, _grid(), T, algo="decbyzpg", **GRID_KW)
-    n_compiled = len(engine._COMPILED)
+    n_compiled = engine.compile_count()
     b = run_grid(ENV, _grid(), T, algo="decbyzpg", **GRID_KW)
-    assert len(engine._COMPILED) == n_compiled     # loop cache reused
+    assert engine.compile_count() == n_compiled     # loop cache reused
     for scn in a:
         np.testing.assert_array_equal(a[scn]["returns"], b[scn]["returns"])
         np.testing.assert_array_equal(a[scn]["diameter"],
@@ -227,10 +228,10 @@ def test_run_grid_arbitrary_axes():
     out = res[(1e-2, "large_noise(sigma=10)")]     # tuple-equality lookup
     assert out["returns"].shape == (2, T)
     assert np.all(np.isfinite(out["returns"]))
-    n = len(engine._COMPILED)
+    n = engine.compile_count()
     res2 = run_grid(ENV, grid, T, algo="decbyzpg",
                     K=3, n_byz=1, N=4, B=2, kappa=2, hidden=(8,))
-    assert len(engine._COMPILED) == n              # cache hit on repeat
+    assert engine.compile_count() == n              # cache hit on repeat
     for scn in res:
         np.testing.assert_array_equal(res[scn]["returns"],
                                       res2[scn]["returns"])
@@ -294,6 +295,164 @@ def test_experiment_no_axes_single_scenario():
     (out,) = res.results.values()
     assert out["returns"].shape == (1, T)
     assert "base" in exp.summary()
+
+
+# ---------------------------------------------------------------------------
+# Lane batching: static/traced split, equivalence, compile counts
+# ---------------------------------------------------------------------------
+
+
+def test_lane_split_static_traced():
+    """Scenarios differing only in traced scalars (eta, a batchable attack
+    sigma, an explicit p equal to the B/N default) share one static
+    representative; the traced vector carries the per-lane values."""
+    from repro.core.registry import Spec
+    a = engine._algo("decbyzpg")
+    cfg1 = tiny_dec(eta=1e-2, attack="large_noise(sigma=10)", seed=3)
+    cfg2 = tiny_dec(eta=5e-3, attack="large_noise(sigma=50)", seed=7)
+    cfg3 = tiny_dec(eta=1e-2, attack="large_noise", p=0.5)   # p = B/N
+    s1, n1, v1 = engine.lane_split(cfg1, a.traced_fields)
+    s2, n2, v2 = engine.lane_split(cfg2, a.traced_fields)
+    s3, n3, v3 = engine.lane_split(cfg3, a.traced_fields)
+    assert s1 == s2 == s3 and n1 == n2 == n3
+    assert s1.attack == Spec("large_noise") and s1.seed == 0
+    assert s1.p is None
+    tr1, tr2, tr3 = (dict(zip(n, v)) for n, v in
+                     ((n1, v1), (n2, v2), (n3, v3)))
+    assert tr1["eta"] == 1e-2 and tr2["eta"] == 5e-3
+    assert tr1["attack.sigma"] == 10.0 and tr2["attack.sigma"] == 50.0
+    assert tr3["attack.sigma"] == 100.0        # factory default filled in
+    assert tr1["switch_p"] == 0.5 and tr3["switch_p"] == 0.5
+    # a non-traced difference (K) changes the static signature
+    s4, _, _ = engine.lane_split(tiny_dec(K=4, n_byz=1),
+                                 a.traced_fields)
+    assert s4 != s1
+
+
+def test_lane_grid_matches_per_scenario():
+    """The lane-batched grid replays the per-scenario loop on the same
+    seed_keys streams — honest and attacked configs — trace for trace."""
+    grid = ScenarioGrid(
+        seeds=(0, 1),
+        axes={"eta": (1e-2, 5e-3),
+              "attack": ("none", "large_noise(sigma=10)")})
+    kw = dict(algo="decbyzpg", K=3, n_byz=1, N=4, B=2, kappa=2,
+              hidden=(8,))
+    lanes = run_grid(ENV, grid, T, lanes=True, **kw)
+    per = run_grid(ENV, grid, T, lanes=False, **kw)
+    assert list(map(tuple, lanes)) == list(map(tuple, per))
+    for scn in per:
+        np.testing.assert_allclose(lanes[scn]["returns"],
+                                   per[scn]["returns"], atol=1e-5)
+        np.testing.assert_array_equal(lanes[scn]["samples"],
+                                      per[scn]["samples"])
+        np.testing.assert_allclose(lanes[scn]["diameter"],
+                                   per[scn]["diameter"], atol=1e-3)
+        np.testing.assert_allclose(np.asarray(lanes[scn]["theta"]),
+                                   np.asarray(per[scn]["theta"]),
+                                   atol=1e-5)
+
+
+def test_lane_grid_matches_per_scenario_byzpg():
+    grid = ScenarioGrid(seeds=(0, 1), axes={"eta": (1e-2, 2e-2)})
+    kw = dict(algo="byzpg", K=3, n_byz=1, attack="sign_flip",
+              N=4, B=2, hidden=(8,))
+    lanes = run_grid(ENV, grid, T, lanes=True, **kw)
+    per = run_grid(ENV, grid, T, lanes=False, **kw)
+    for scn in per:
+        np.testing.assert_allclose(lanes[scn]["returns"],
+                                   per[scn]["returns"], atol=1e-5)
+        np.testing.assert_array_equal(lanes[scn]["samples"],
+                                      per[scn]["samples"])
+
+
+def test_lane_grid_compile_count():
+    """A scalar sweep is ONE compiled program per static signature: a
+    6-point eta × 4-seed grid adds exactly one compiled-loop cache entry;
+    adding a shape axis (K) adds one entry per K value, not per combo."""
+    kw = dict(algo="decbyzpg", N=4, B=2, kappa=1, hidden=(8,))
+    engine.clear_cache()
+    run_grid(ENV, ScenarioGrid(
+        seeds=(0, 1, 2, 3),
+        axes={"eta": (1e-3, 2e-3, 5e-3, 1e-2, 2e-2, 5e-2)}),
+        T, K=3, **kw)
+    assert engine.compile_count() == 1
+    engine.clear_cache()
+    run_grid(ENV, ScenarioGrid(
+        seeds=(0, 1), axes={"eta": (1e-2, 2e-2), "K": (3, 4)}),
+        T, **kw)
+    assert engine.compile_count() == 2
+    # re-running the same grid reuses both programs
+    run_grid(ENV, ScenarioGrid(
+        seeds=(0, 1), axes={"eta": (1e-2, 2e-2), "K": (3, 4)}),
+        T, **kw)
+    assert engine.compile_count() == 2
+
+
+def test_lane_grid_lane_matches_single_run():
+    """A lane inside a lane-batched sweep replays run_decbyzpg for the
+    matching (config, seed) exactly like a per-scenario grid lane does."""
+    cfg = tiny_dec(seed=2, eta=5e-3)
+    single = run_decbyzpg(ENV, cfg, T)
+    res = run_grid(ENV, ScenarioGrid(seeds=(2,),
+                                     axes={"eta": (1e-2, 5e-3)}),
+                   T, algo="decbyzpg", K=3, n_byz=1, attack="sign_flip",
+                   aggregator="rfa", agreement="gda", **GRID_KW_NOETA)
+    out = res[(5e-3,)]
+    np.testing.assert_allclose(out["returns"][0], single["returns"],
+                               atol=1e-5)
+    np.testing.assert_array_equal(out["samples"][0], single["samples"])
+
+
+# ---------------------------------------------------------------------------
+# ExperimentResult.sel diagnostics + Spec-stable scenario names
+# ---------------------------------------------------------------------------
+
+
+def _fake_result():
+    from repro.core.engine import ExperimentResult, scenario_key
+    from repro.core.registry import Spec
+    axes = {"eta": (1e-2, 2e-2),
+            "attack": (Spec.of("none"), Spec.of("large_noise(sigma=10)"))}
+    key_cls = scenario_key(axes)
+    results = {key_cls(e, a): {"scn": (e, a)}
+               for e in axes["eta"] for a in axes["attack"]}
+    return ExperimentResult({}, axes, results)
+
+
+def test_sel_underspecified_names_free_axes():
+    import pytest
+    res = _fake_result()
+    with pytest.raises(KeyError, match="under-specified") as ei:
+        res.sel(eta=1e-2)
+    msg = str(ei.value)
+    assert "attack" in msg and "large_noise(sigma=10)" in msg
+    # the scenario-tuple dump of the old error is gone
+    assert "Scenario(" not in msg
+    with pytest.raises(KeyError, match="matches no scenario"):
+        res.sel(eta=3.0)
+    with pytest.raises(KeyError, match="not sweep axes"):
+        res.sel(bogus=1)
+
+
+def test_sel_spec_string_interchangeable():
+    from repro.core.registry import Spec
+    res = _fake_result()
+    out = res.sel(eta=1e-2, attack="large_noise(sigma=10)")
+    assert out["scn"][1] == Spec.of("large_noise(sigma=10)")
+    out2 = res.sel(eta=1e-2, attack=Spec.of("large_noise(sigma=10)"))
+    assert out2 is out
+
+
+def test_scenario_name_canonical_for_specs():
+    from repro.core.engine import ExperimentResult, scenario_key
+    from repro.core.registry import Spec
+    key_cls = scenario_key(("attack", "eta"))
+    scn_spec = key_cls(Spec.of("large_noise(sigma=10)"), 1e-2)
+    scn_str = key_cls("large_noise(sigma=10)", 1e-2)
+    name = ExperimentResult.scenario_name(scn_spec)
+    assert name == ExperimentResult.scenario_name(scn_str)
+    assert "Spec(" not in name and "large_noise(sigma=10)" in name
 
 
 def test_experiment_matches_run_grid():

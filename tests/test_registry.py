@@ -203,7 +203,7 @@ def test_run_decbyzpg_accepts_parameterized_specs():
                          agreement="gda(alpha_bar=0.25)", kappa=1,
                          N=4, B=2, hidden=(8,), seed=0)
     out = run_decbyzpg(env, cfg, 3)
-    n = len(engine._COMPILED)
+    n = engine.compile_count()
     again = run_decbyzpg(env, cfg, 3)
-    assert len(engine._COMPILED) == n
+    assert engine.compile_count() == n
     np.testing.assert_array_equal(out["returns"], again["returns"])

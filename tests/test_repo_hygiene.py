@@ -1,0 +1,45 @@
+"""Repository hygiene invariants enforced as tests.
+
+Smoke-sized benchmark outputs (``benchmarks/*_smoke.json``) are CI/dev
+artifacts regenerated per run; only the full-ladder ``BENCH_*.json``
+baselines are the committed perf trajectory (DESIGN.md §6). A tracked
+smoke file would silently stand in for a regression baseline, so the
+"never tracked" rule is pinned here (and mirrored as a CI step) instead
+of living only in reviewers' heads.
+"""
+import os
+import subprocess
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _git(*args) -> str:
+    try:
+        out = subprocess.run(["git", *args], cwd=REPO, capture_output=True,
+                             text=True, timeout=60)
+    except (OSError, subprocess.TimeoutExpired):
+        pytest.skip("git unavailable")
+    if out.returncode != 0:
+        pytest.skip(f"not a git checkout: {out.stderr.strip()[:120]}")
+    return out.stdout
+
+
+def test_no_smoke_benchmark_file_is_tracked():
+    tracked = [line for line in _git(
+        "ls-files", "benchmarks/*_smoke.json").splitlines() if line]
+    assert not tracked, (
+        f"smoke benchmark outputs must stay untracked (they are per-run "
+        f"artifacts, not committed baselines): {tracked}; "
+        f"fix with `git rm --cached {' '.join(tracked)}`")
+
+
+def test_gitignore_covers_smoke_outputs():
+    """Every smoke writer targets benchmarks/*_smoke.json; the ignore
+    pattern must cover the whole family so a new bench script cannot
+    reintroduce a trackable smoke file."""
+    with open(os.path.join(REPO, ".gitignore")) as f:
+        patterns = [line.strip() for line in f
+                    if line.strip() and not line.startswith("#")]
+    assert "benchmarks/*_smoke.json" in patterns

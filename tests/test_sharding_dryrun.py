@@ -85,6 +85,41 @@ for arch in ["llama3_2_1b", "deepseek_v2_lite_16b"]:
     assert out.count("COMPILE_OK") == 2
 
 
+def test_lane_grid_shards_over_fake_devices():
+    """The lane-batched grid on a forced 4-device host mesh: the
+    flattened lane×seed batch (4 etas × 2 seeds = 8 rows) divides the
+    device count, so `lane_sharding` shards it — and the sharded run
+    must reproduce the per-scenario loop's traces on the same machine."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, numpy as np
+from repro.core.engine import ScenarioGrid, run_grid
+from repro.distributed.sharding import lane_mesh, lane_sharding
+from repro.rl.envs import make_cartpole
+
+mesh = lane_mesh()
+assert mesh is not None and mesh.size == 4, mesh
+assert lane_sharding(mesh, 8) is not None     # 8 rows over 4 devices
+assert lane_sharding(mesh, 6) is None         # uneven -> identity layout
+
+env = make_cartpole(horizon=10)
+grid = ScenarioGrid(seeds=(0, 1),
+                    axes={"eta": (1e-3, 5e-3, 1e-2, 2e-2)})
+kw = dict(algo="decbyzpg", K=3, n_byz=1, attack="large_noise(sigma=10)",
+          N=4, B=2, kappa=1, hidden=(4,))
+lanes = run_grid(env, grid, 3, lanes=True, **kw)
+per = run_grid(env, grid, 3, lanes=False, **kw)
+for scn in per:
+    np.testing.assert_allclose(lanes[scn]["returns"],
+                               per[scn]["returns"], atol=1e-5)
+    np.testing.assert_array_equal(lanes[scn]["samples"],
+                                  per[scn]["samples"])
+print("LANE_SHARD_OK")
+"""
+    assert "LANE_SHARD_OK" in _run_subprocess(code)
+
+
 def test_dryrun_results_if_present():
     """When the production sweep has run, every recorded pair must have
     lowered+compiled OK."""

@@ -262,9 +262,9 @@ def test_default_config_is_complete_and_static_key_stable():
     assert engine.static_key(c_default) == engine.static_key(c_complete)
     assert engine.static_key(c_default) != engine.static_key(c_ring)
     r1 = run_decbyzpg(ENV, c_default, T)
-    n = len(engine._COMPILED)
+    n = engine.compile_count()
     r2 = run_decbyzpg(ENV, c_complete, T)    # cache hit
-    assert len(engine._COMPILED) == n
+    assert engine.compile_count() == n
     np.testing.assert_array_equal(np.asarray(r1["theta"]),
                                   np.asarray(r2["theta"]))
 

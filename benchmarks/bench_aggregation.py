@@ -1,0 +1,150 @@
+"""Robust-aggregation benchmark: us/call and peak-bytes/device for the
+registry aggregators over a D ladder up to transformer scale.
+
+Times each aggregator on a (K, D) stack through three execution paths:
+
+  jnp               dense registry path on the jnp-oracle kernels
+  pallas[-interpret] dense registry path on the Pallas kernels (compiled
+                    on TPU; the interpreter elsewhere, skipped above
+                    ``INTERPRET_MAX_D`` — minutes-slow at model scale)
+  flat              the sharded flat execution layer (DESIGN.md §3:
+                    local-shard Gram + K² psum, ``sharded=True``) — the
+                    path a D-sharded transformer stack takes
+
+The top ladder point is the actual flat parameter count of the reduced
+``qwen2.5-3b`` policy/trainer config, so the numbers answer "what does
+robust aggregation cost at the scale ``examples/federated_llm.py``
+runs at". Alongside wall-clock, each row records the compiled program's
+per-device memory footprint (``memory_analysis()``: argument/output/temp
+bytes) — the O(K² + K·D/devices) claim of the sharded path is asserted
+from these numbers by ``tests/test_flat_aggregation.py``.
+
+Results go to ``benchmarks/BENCH_aggregation.json``; ``--smoke`` runs the
+smallest ladder point only and writes the untracked
+``BENCH_aggregation_smoke.json`` that ``benchmarks/check_regress.py``
+gates CI with (only ``us_per_call`` is gated; byte counts are recorded,
+not gated).
+
+  PYTHONPATH=src python -m benchmarks.bench_aggregation [--smoke]
+"""
+import argparse
+import json
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.timing import min_time_s
+
+K = 8
+N_BYZ = 1
+AGGREGATORS = ("krum", "rfa", "trimmed_mean")
+#: interpret-mode runs above this D are skipped off-TPU (the interpreter
+#: is minutes-slow at model scale; the skip is printed, not silent)
+INTERPRET_MAX_D = 4096
+
+
+def transformer_d() -> int:
+    """Flat parameter count of the reduced qwen2.5-3b config — the D the
+    federated-LLM example actually aggregates at (deterministic, so the
+    ladder key matches across runs)."""
+    from repro.configs.base import get_config, reduced
+    from repro.models.model import init_params
+    shapes = jax.eval_shape(
+        lambda k: init_params(reduced(get_config("qwen2.5-3b")), k),
+        jax.random.PRNGKey(0))
+    return int(sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes)))
+
+
+def ladder() -> tuple:
+    # first entry is the smoke shape, so smoke rows always have a matching
+    # key in the committed full-ladder baseline
+    return (4096, 65536, transformer_d())
+
+
+def _make_fn(name: str, backend: str, pallas_backend: str):
+    """Jitted ``fn(x, key) -> (D,)`` for one (aggregator, path) cell."""
+    from repro.core.registry import resolve
+    from repro.kernels import dispatch
+
+    if backend == "flat":
+        agg = resolve("aggregator", name, K=K, n_byz=N_BYZ, sharded=True)
+        return jax.jit(lambda x, k: agg(x, k))
+    agg = resolve("aggregator", name, K=K, n_byz=N_BYZ, sharded=False)
+    kb = backend if backend != "pallas" else pallas_backend
+
+    def call(x, k):
+        # backend dispatch is trace-time, so the context scopes the jit
+        with dispatch.use_backend(kb):
+            return agg(x, k)
+
+    return jax.jit(call)
+
+
+def _memory_bytes(fn, *args):
+    """Per-device compiled footprint, or Nones where the backend doesn't
+    expose memory_analysis()."""
+    try:
+        ma = fn.lower(*args).compile().memory_analysis()
+        return (int(ma.argument_size_in_bytes), int(ma.output_size_in_bytes),
+                int(ma.temp_size_in_bytes))
+    except Exception:
+        return None, None, None
+
+
+def run(sizes=None, repeats: int = 20, smoke: bool = False) -> dict:
+    from repro.kernels import dispatch
+
+    sizes = ladder() if sizes is None else sizes
+    pallas_backend = "pallas" if dispatch.on_tpu() else "pallas-interpret"
+    key = jax.random.PRNGKey(0)
+    rows = []
+    print("aggregator,backend,K,D,us_per_call,temp_bytes", flush=True)
+    for D in sizes:
+        x = jax.random.normal(key, (K, D))
+        for name in AGGREGATORS:
+            for backend in ("jnp", pallas_backend, "flat"):
+                if (backend == "pallas-interpret"
+                        and D > INTERPRET_MAX_D):
+                    print(f"# skip {name}/{backend} at D={D} "
+                          f"(> INTERPRET_MAX_D={INTERPRET_MAX_D})",
+                          flush=True)
+                    continue
+                fn = _make_fn(name, backend, pallas_backend)
+                us = min_time_s(fn, x, key, repeats=repeats) * 1e6
+                arg_b, out_b, temp_b = _memory_bytes(fn, x, key)
+                rows.append({"aggregator": name, "backend": backend,
+                             "K": K, "D": D, "us_per_call": us,
+                             "arg_bytes": arg_b, "out_bytes": out_b,
+                             "temp_bytes": temp_b})
+                print(f"{name},{backend},{K},{D},{us:.1f},{temp_b}",
+                      flush=True)
+    doc = {"bench": "aggregation", "backend": jax.default_backend(),
+           "n_devices": jax.device_count(), "smoke": smoke,
+           "repeats": repeats, "rows": rows}
+    # smoke runs get their own (untracked) file so a CI-sized run can't
+    # silently replace the tracked full-ladder baseline
+    name = ("BENCH_aggregation_smoke.json" if smoke
+            else "BENCH_aggregation.json")
+    path = os.path.join(os.path.dirname(__file__), name)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"# wrote {path}", flush=True)
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI run (smallest ladder point only)")
+    args = ap.parse_args()
+    if args.smoke:
+        run(sizes=ladder()[:1], repeats=30, smoke=True)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

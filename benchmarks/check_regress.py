@@ -43,6 +43,10 @@ def row_key(doc: dict, row: dict) -> Optional[Tuple]:
         # sweep rows carry (L, S); single-config rows leave them None
         return (bench, row["name"], row.get("env"), row.get("K"),
                 row.get("T"), row.get("L"), row.get("S"))
+    if bench == "aggregation":
+        # only us_per_call gates; the *_bytes fields are informational
+        return (bench, row["aggregator"], row["backend"],
+                row["K"], row["D"])
     return None                       # unknown schema: never gates
 
 

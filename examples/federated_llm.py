@@ -1,22 +1,21 @@
 """Byzantine-tolerant federated LLM training (the paper's optimizer applied
 to an assigned architecture): 6 agents, 1 Byzantine sending LargeNoise,
-bucketed-RFA aggregation + GDA agreement, PAGE coin via Common-Sample.
+RFA aggregation + GDA agreement, PAGE coin via Common-Sample.
+
+Runs on the flat (K, D) parameter stack (DESIGN.md §3): every agent's
+transformer ravels into one row, the trailing D axis is sharded over the
+mesh's "model" axis, and robust aggregation goes through the registry
+aggregators' sharded Gram path — one K² psum, no parameter gather.
 
   PYTHONPATH=src python examples/federated_llm.py --arch qwen2.5-3b
+  # exercise the sharded path on CPU:
+  PYTHONPATH=src python examples/federated_llm.py --fake-devices 4
 """
 import argparse
+import os
 import sys
 
 sys.path.insert(0, "src")
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import get_config, reduced
-from repro.data.pipeline import DataConfig, TokenPipeline
-from repro.distributed.fed_trainer import (FedConfig, common_sample_coin,
-                                           fed_train_step, init_fed_state)
 
 
 def main():
@@ -25,22 +24,67 @@ def main():
     ap.add_argument("--steps", type=int, default=12)
     ap.add_argument("--agents", type=int, default=6)
     ap.add_argument("--byz", type=int, default=1)
+    ap.add_argument("--tree", action="store_true",
+                    help="legacy tree-sharded trainer instead of the flat "
+                         "(K, D) stack")
+    ap.add_argument("--fake-devices", type=int, default=0,
+                    help="split one host into N XLA devices (set before "
+                         "jax import) so the sharded path engages on CPU")
     args = ap.parse_args()
+    if args.fake_devices > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.fake_devices}")
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.configs.base import get_config, reduced
+    from repro.data.pipeline import DataConfig, TokenPipeline
+    from repro.distributed.fed_trainer import (
+        FedConfig, common_sample_coin, fed_train_step, fed_train_step_flat,
+        flat_fed_state_shardings, init_fed_state, init_flat_fed_state)
 
     cfg = reduced(get_config(args.arch))
     fed = FedConfig(aggregator="rfa", kappa=3, n_byz=args.byz,
                     attack="large_noise", lr=2e-3, page_p=0.25)
     K = args.agents
     key = jax.random.PRNGKey(0)
-    state = init_fed_state(cfg, fed, K, key)
-    pipe = TokenPipeline(DataConfig(cfg.vocab_size, 64, 2, K,
-                                    seed=0))
+    pipe = TokenPipeline(DataConfig(cfg.vocab_size, 64, 2, K, seed=0))
     mask = jnp.asarray(np.arange(K) < args.byz)
-    steps = {c: jax.jit(lambda s, b, m, k, c=c: fed_train_step(
-        cfg, fed, s, b, m, k, large=c)) for c in (True, False)}
+
+    devs = jax.devices()
+    mesh = Mesh(np.asarray(devs), ("model",)) if len(devs) > 1 else None
+
+    if args.tree:
+        state = init_fed_state(cfg, fed, K, key)
+        steps = {c: jax.jit(lambda s, b, m, k, c=c: fed_train_step(
+            cfg, fed, s, b, m, k, large=c)) for c in (True, False)}
+        path = "tree-sharded"
+    else:
+        state, unravel = init_flat_fed_state(cfg, fed, K, key, mesh=mesh)
+        D = state.theta.shape[1]
+        sharded = mesh is not None
+        jit_kw = {}
+        if sharded:
+            sh = flat_fed_state_shardings(
+                mesh, jax.tree.map(
+                    lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype),
+                    state))
+            jit_kw = dict(in_shardings=(sh, None, None, None),
+                          out_shardings=(sh, None), donate_argnums=(0,))
+        steps = {c: jax.jit(
+            lambda s, b, m, k, c=c: fed_train_step_flat(
+                cfg, fed, s, unravel, b, m, k, large=c, sharded=sharded),
+            **jit_kw) for c in (True, False)}
+        path = (f"flat (K, D={D}) stack, "
+                + (f"D-sharded over {len(devs)} devices" if sharded
+                   else "single device"))
 
     print(f"{cfg.name}: K={K}, {args.byz} Byzantine (LargeNoise), "
-          f"RFA + GDA(kappa=3), PAGE p={fed.page_p}")
+          f"RFA + GDA(kappa=3), PAGE p={fed.page_p} — {path}")
     for t in range(args.steps):
         c = common_sample_coin(t, 0, fed.page_p)
         key, k = jax.random.split(key)

@@ -24,9 +24,23 @@ from repro.core.registry import Spec, register, resolve
 from repro.kernels.dispatch import get_kernel
 
 
-def pairwise_sq_dists(x: jnp.ndarray, backend: Optional[str] = None
-                      ) -> jnp.ndarray:
-    """(K, d) -> (K, K) squared euclidean distances (dispatched kernel)."""
+def _sharded(x, sharded: Optional[bool]) -> bool:
+    """Route to the flat sharded execution layer? Explicit intent wins;
+    otherwise detect a NamedSharding splitting the trailing (parameter)
+    axis — eager-only, like every other trace-time dispatch decision."""
+    if sharded is not None:
+        return bool(sharded)
+    from repro.distributed.aggregation import dim_sharded
+    return dim_sharded(x)
+
+
+def pairwise_sq_dists(x: jnp.ndarray, backend: Optional[str] = None,
+                      sharded: Optional[bool] = None) -> jnp.ndarray:
+    """(K, d) -> (K, K) squared euclidean distances (dispatched kernel; a
+    D-sharded input takes the local-Gram + K² psum path instead)."""
+    if _sharded(x, sharded):
+        from repro.distributed import aggregation as agg_lib
+        return agg_lib.flat_sq_dists(x)
     return get_kernel("pairwise_dist")(x, backend=backend)
 
 
@@ -38,13 +52,19 @@ def mean(x, key=None):
     return jnp.mean(x, axis=0)
 
 
-def krum(x, n_byz: int, key=None, m: int = 1):
+def krum(x, n_byz: int, key=None, m: int = 1,
+         sharded: Optional[bool] = None):
     """(Multi-)Krum [34]: score_i = Σ_{j in closest K-n_byz-2} ||x_j - x_i||²;
     return the mean of the m lowest-scoring inputs.
 
     Scoring routes through the ``krum_score`` kernel (Gram pass + on-device
-    rank network); only the final m-way selection runs as generic jnp.
+    rank network); only the final m-way selection runs as generic jnp. A
+    D-sharded input instead runs the flat sharded layer (local-shard Gram
+    + K² psum, selection by weighted sum — no row gather).
     """
+    if _sharded(x, sharded):
+        from repro.distributed import aggregation as agg_lib
+        return agg_lib.flat_krum(x, n_byz, m=m)
     K = x.shape[0]
     n_near = max(K - n_byz - 2, 1)
     scores = get_kernel("krum_score")(x, n_near)
@@ -54,9 +74,15 @@ def krum(x, n_byz: int, key=None, m: int = 1):
     return jnp.mean(x[idx], axis=0)
 
 
-def rfa(x, key=None, n_iter: int = 32, nu: float = 1e-6):
+def rfa(x, key=None, n_iter: int = 32, nu=1e-6,
+        sharded: Optional[bool] = None):
     """Robust Federated Averaging [35]: geometric median via smoothed
-    Weiszfeld [36] — dispatched to the Gram-space ``rfa`` kernel."""
+    Weiszfeld [36] — dispatched to the Gram-space ``rfa`` kernel; a
+    D-sharded input runs the same weight-space iteration on the psum'd
+    Gram matrix (``flat_rfa``)."""
+    if _sharded(x, sharded):
+        from repro.distributed import aggregation as agg_lib
+        return agg_lib.flat_rfa(x, n_iter=n_iter, nu=nu)
     return get_kernel("rfa")(x, n_iter=n_iter, nu=nu)
 
 
@@ -64,11 +90,16 @@ def coordinate_median(x, key=None):
     return jnp.median(x, axis=0)
 
 
-def trimmed_mean(x, n_byz: int, key=None):
+def trimmed_mean(x, n_byz: int, key=None, sharded: Optional[bool] = None):
     """Coordinate-wise: drop the n_byz largest and smallest per coordinate.
 
-    Routes through the dispatched ``trimmed_mean`` kernel.
+    Routes through the dispatched ``trimmed_mean`` kernel; D-sharded
+    inputs run the oracle body shard-locally (coordinate-wise reduces
+    commute with D-sharding).
     """
+    if _sharded(x, sharded):
+        from repro.distributed import aggregation as agg_lib
+        return agg_lib.flat_trimmed_mean(x, n_byz)
     return get_kernel("trimmed_mean")(x, n_byz)
 
 
@@ -144,19 +175,22 @@ def _mean_factory():
 
 
 @register("aggregator", "krum")
-def _krum_factory(K, n_byz, m: int = 1, alpha_max: float = 0.25):
+def _krum_factory(K, n_byz, m: int = 1, alpha_max: float = 0.25,
+                  sharded: Optional[bool] = None):
     bs = _lemma3_bucket_size(K, n_byz, alpha_max)
     if bs == 1:
-        return lambda x, key=None: krum(x, n_byz=max(n_byz, 1), m=m)
-    inner = functools.partial(krum, n_byz=max(1, -(-K // bs) // 4), m=m)
+        return lambda x, key=None: krum(x, n_byz=max(n_byz, 1), m=m,
+                                        sharded=sharded)
+    inner = functools.partial(krum, n_byz=max(1, -(-K // bs) // 4), m=m,
+                              sharded=sharded)
     return lambda x, key: bucketing(inner, x, key, bs)
 
 
-@register("aggregator", "rfa")
-def _rfa_factory(K, n_byz, n_iter: int = 32, nu: float = 1e-6,
-                 alpha_max: float = 0.5):
+@register("aggregator", "rfa", traced_kwargs=("nu",))
+def _rfa_factory(K, n_byz, n_iter: int = 32, nu=1e-6,
+                 alpha_max: float = 0.5, sharded: Optional[bool] = None):
     bs = _lemma3_bucket_size(K, n_byz, alpha_max)
-    inner = functools.partial(rfa, n_iter=n_iter, nu=nu)
+    inner = functools.partial(rfa, n_iter=n_iter, nu=nu, sharded=sharded)
     if bs == 1:
         return lambda x, key=None: inner(x)
     return lambda x, key: bucketing(inner, x, key, bs)
@@ -167,14 +201,15 @@ def _cwmed_factory():
     return lambda x, key=None: coordinate_median(x)
 
 
-@register("aggregator", "centered_clip")
-def _centered_clip_factory(tau: float = 1.0, n_iter: int = 5):
+@register("aggregator", "centered_clip", traced_kwargs=("tau",))
+def _centered_clip_factory(tau=1.0, n_iter: int = 5):
     return lambda x, key=None: centered_clip(x, tau=tau, n_iter=n_iter)
 
 
 @register("aggregator", "trimmed_mean")
-def _trimmed_mean_factory(n_byz):
-    return lambda x, key=None: trimmed_mean(x, max(n_byz, 1))
+def _trimmed_mean_factory(n_byz, sharded: Optional[bool] = None):
+    return lambda x, key=None: trimmed_mean(x, max(n_byz, 1),
+                                            sharded=sharded)
 
 
 @register("aggregator", "bucketing")

@@ -138,7 +138,8 @@ def avg_agree(theta: jnp.ndarray, kappa: int, n_byz: int,
               key: Optional[jnp.ndarray] = None,
               alpha_bar: Optional[float] = None,
               topology=None,
-              kernel_backend: Optional[str] = None) -> jnp.ndarray:
+              kernel_backend: Optional[str] = None,
+              sharded: Optional[bool] = None) -> jnp.ndarray:
     """Simulate Avg-Agree_κ over K agents (paper Algorithm 3, generalized
     to gossip graphs).
 
@@ -151,7 +152,11 @@ def avg_agree(theta: jnp.ndarray, kappa: int, n_byz: int,
     ``gossip_reduce`` kernel. ``kernel_backend`` scopes the dispatch
     backend over the whole multi-round core (trace-time), so it governs
     every kernel inside — the gossip reduces and MDA's pairwise-distance
-    kernel alike.
+    kernel alike. When ``theta`` is D-sharded (detected eagerly, or forced
+    with ``sharded=True`` from inside jit) and no backend was requested,
+    the rounds run on the ``jnp`` oracles: the cw reduces are
+    coordinate-wise and therefore shard-local, whereas a Pallas call would
+    gather the full (K, d) stack to one device.
     attack: fn(broadcast (K,d), byz_mask, key) -> (K_recv, K_send, d) or
     (K_send, d) messages. None = honest broadcast. An active attack
     requires an explicit ``key`` — there is no silent PRNGKey(0) fallback
@@ -164,6 +169,10 @@ def avg_agree(theta: jnp.ndarray, kappa: int, n_byz: int,
     value an honest agent in that slot would compute; callers mask them).
     """
     K, d = theta.shape
+    if kernel_backend is None:
+        from repro.distributed.aggregation import dim_sharded
+        if dim_sharded(theta) if sharded is None else sharded:
+            kernel_backend = "jnp"     # shard-local coordinate-wise rounds
     m = resolve("agreement", method, n_byz=n_byz)
     topo = resolve_topology(topology, K)
     nbr = jnp.asarray(topo.nbr_idx)                      # (K, P)

@@ -34,15 +34,14 @@ import numpy as np
 
 from repro.core import attacks as attacks_lib
 from repro.core import engine
-from repro.core.aggregators import get_aggregator
 from repro.core.registry import normalize_spec_fields, register, resolve
 from repro.core.tree import ravel
 from repro.optim.optimizers import get_optimizer
 from repro.rl.gradient import grad_estimate, weighted_grad_estimate
-from repro.rl.policy import init_mlp, mlp_sizes, mlp_unraveler
+from repro.rl.policy import policy_unraveler, resolve_policy
 from repro.rl.rollout import batch_return, sample_batch
 
-_SPEC_FIELDS = ("attack", "aggregator", "estimator", "optimizer")
+_SPEC_FIELDS = ("attack", "aggregator", "estimator", "optimizer", "policy")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +56,7 @@ class ByzPGConfig:
     eta: float = 5e-3
     gamma: float = 0.999
     estimator: object = "gpomdp"
+    policy: object = "mlp"      # policy spec (see repro.rl.policy)
     activation: str = "relu"
     hidden: tuple = (16, 16)
     optimizer: object = "adam"
@@ -77,7 +77,7 @@ def _optimizer(cfg):
 
 def init_byzpg_carry(env, cfg: ByzPGConfig, k_init):
     """(θ (d,), θ_prev, v_prev, opt_state) — traceable for grid lanes."""
-    vec0 = ravel(init_mlp(k_init, mlp_sizes(env, cfg.hidden)))[0]
+    vec0 = ravel(resolve_policy(cfg, env).init(k_init))[0]
     opt_state = _optimizer(cfg).init(vec0)
     return vec0, jnp.array(vec0), jnp.zeros_like(vec0), opt_state
 
@@ -93,12 +93,15 @@ def build_byzpg_step(env, cfg: ByzPGConfig, traced=None):
     gamma = engine.traced_value(traced, "gamma", cfg.gamma)
     baseline = engine.traced_value(traced, "baseline", cfg.baseline)
     switch_p = engine.traced_value(traced, "switch_p", cfg.switch_p)
-    unravel, _ = mlp_unraveler(env, cfg.hidden)
+    policy = resolve_policy(cfg, env)
+    unravel, _ = policy_unraveler(policy)
+    logits_spec = policy.logits
     byz_mask = jnp.asarray(np.arange(cfg.K) < cfg.n_byz)
     env_level = attacks_lib.is_env_level(cfg.attack)
     attack = resolve("attack", cfg.attack,
                      **engine.traced_spec_kwargs(traced, "attack"))
-    agg = get_aggregator(cfg.aggregator, cfg.K, cfg.n_byz)
+    agg = resolve("aggregator", cfg.aggregator, K=cfg.K, n_byz=cfg.n_byz,
+                  **engine.traced_spec_kwargs(traced, "aggregator"))
     opt = get_optimizer(cfg.optimizer, eta)
     scales = jnp.where(byz_mask & env_level, 0.0, 1.0)
 
@@ -118,14 +121,14 @@ def build_byzpg_step(env, cfg: ByzPGConfig, traced=None):
         prev = unravel(prev_vec)
 
         def one(k, scale):
-            traj = sample_batch(env, params, k, M, cfg.activation,
+            traj = sample_batch(env, params, k, M, logits_spec,
                                 logit_scale=scale)
             g = ravel(grad_estimate(params, traj, gamma, baseline,
-                                    cfg.estimator, cfg.activation,
+                                    cfg.estimator, logits_spec,
                                     sample_weights=w))[0]
             g_old = ravel(weighted_grad_estimate(
                 prev, params, traj, gamma, baseline,
-                cfg.estimator, cfg.activation,
+                cfg.estimator, logits_spec,
                 sample_weights=w_small))[0]
             return g, g_old, jnp.sum(w * batch_return(traj))
 
@@ -179,7 +182,7 @@ def run_byzpg(env, cfg: ByzPGConfig, T: int, eval_every: int = 1):
     """Returns dict(history of honest mean returns, sampled trajectories per
     agent, final params)."""
     ks = engine.seed_keys(cfg.seed)
-    unravel, _ = mlp_unraveler(env, cfg.hidden)
+    unravel, _ = policy_unraveler(resolve_policy(cfg, env))
     carry = init_byzpg_carry(env, cfg, ks.init)
     loop = fused_byzpg(env, cfg, T)
     hist = jax.block_until_ready(
@@ -192,7 +195,7 @@ def run_byzpg_legacy(env, cfg: ByzPGConfig, T: int, eval_every: int = 1):
     call, host sync per iteration) — kept for equivalence tests and the
     ``bench_engine`` baseline."""
     ks = engine.seed_keys(cfg.seed)
-    unravel, _ = mlp_unraveler(env, cfg.hidden)
+    unravel, _ = policy_unraveler(resolve_policy(cfg, env))
     carry = init_byzpg_carry(env, cfg, ks.init)
     step = jax.jit(build_byzpg_step(env, cfg))
     step_keys = jax.random.split(ks.loop, T)

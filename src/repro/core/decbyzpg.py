@@ -35,17 +35,16 @@ import numpy as np
 from repro.core import attacks as attacks_lib
 from repro.core import engine
 from repro.core.agreement import avg_agree, honest_diameter
-from repro.core.aggregators import get_aggregator
 from repro.core.registry import normalize_spec_fields, register, resolve
 from repro.core.tree import ravel
 from repro.optim.optimizers import get_optimizer
 from repro.rl.gradient import grad_estimate, weighted_grad_estimate
-from repro.rl.policy import init_mlp, mlp_sizes, mlp_unraveler
+from repro.rl.policy import policy_unraveler, resolve_policy
 from repro.rl.rollout import batch_return, sample_batch
 from repro.topology import resolve_topology
 
 _SPEC_FIELDS = ("attack", "aggregator", "agreement", "estimator",
-                "optimizer", "topology")
+                "optimizer", "topology", "policy")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +65,9 @@ class DecByzPGConfig:
     eta: float = 5e-3
     gamma: float = 0.999
     estimator: object = "gpomdp"
+    policy: object = "mlp"      # policy spec: mlp(hidden=, activation=) |
+    # transformer(arch=, n_layers=, ...) — resolves against env plus the
+    # activation/hidden fields below (which stay the mlp defaults)
     activation: str = "relu"
     hidden: tuple = (16, 16)
     baseline: float = 0.0
@@ -87,7 +89,7 @@ def _optimizer(cfg: DecByzPGConfig):
 def init_decbyzpg_carry(env, cfg: DecByzPGConfig, k_init):
     """(θ_0 (K,d) common init, θ_prev, per-agent optimizer state) —
     traceable, so a grid lane can build its own carry under vmap."""
-    vec0 = ravel(init_mlp(k_init, mlp_sizes(env, cfg.hidden)))[0]
+    vec0 = ravel(resolve_policy(cfg, env).init(k_init))[0]
     theta0 = jnp.tile(vec0, (cfg.K, 1))
     opt0 = jax.vmap(_optimizer(cfg).init)(theta0)
     return theta0, jnp.array(theta0), opt0
@@ -112,14 +114,19 @@ def build_decbyzpg_step(env, cfg: DecByzPGConfig, traced=None):
     gamma = engine.traced_value(traced, "gamma", cfg.gamma)
     baseline = engine.traced_value(traced, "baseline", cfg.baseline)
     switch_p = engine.traced_value(traced, "switch_p", cfg.switch_p)
-    unravel, _ = mlp_unraveler(env, cfg.hidden)
+    policy = resolve_policy(cfg, env)
+    unravel, _ = policy_unraveler(policy)
+    logits_spec = policy.logits
     byz_mask = jnp.asarray(np.arange(cfg.K) < cfg.n_byz)
     env_level = attacks_lib.is_env_level(cfg.attack)
     attack = resolve("attack", cfg.attack,
                      **engine.traced_spec_kwargs(traced, "attack"))
     agr_attack = (attacks_lib.per_receiver(attack, cfg.K)
                   if cfg.per_receiver else attack)
-    agg = get_aggregator(cfg.aggregator, cfg.K, cfg.n_byz)
+    # traced aggregator kwargs (e.g. rfa's nu) arrive as array operands so
+    # an aggregator-scalar sweep shares this compiled program
+    agg = resolve("aggregator", cfg.aggregator, K=cfg.K, n_byz=cfg.n_byz,
+                  **engine.traced_spec_kwargs(traced, "aggregator"))
     scales = jnp.where(byz_mask & env_level, 0.0, 1.0)
     opt = get_optimizer(cfg.optimizer, eta)
     topo = resolve_topology(cfg.topology, cfg.K)
@@ -132,16 +139,16 @@ def build_decbyzpg_step(env, cfg: DecByzPGConfig, traced=None):
     def agent_estimate(theta_vec, theta_prev_vec, key, w, scale):
         params = unravel(theta_vec)
         prev = unravel(theta_prev_vec)
-        traj = sample_batch(env, params, key, M, cfg.activation,
+        traj = sample_batch(env, params, key, M, logits_spec,
                             logit_scale=scale)
         g = ravel(grad_estimate(params, traj, gamma, baseline,
-                                cfg.estimator, cfg.activation,
+                                cfg.estimator, logits_spec,
                                 sample_weights=w))[0]
         # IS-corrected estimate at θ_prev on the small-batch slice; masked
         # out on large steps by the coin select below.
         g_old = ravel(weighted_grad_estimate(
             prev, params, traj, gamma, baseline,
-            cfg.estimator, cfg.activation, sample_weights=w_small))[0]
+            cfg.estimator, logits_spec, sample_weights=w_small))[0]
         return g, g_old, jnp.sum(w * batch_return(traj))
 
     def step(carry, xs, coin_key):
@@ -215,7 +222,7 @@ def run_decbyzpg(env, cfg: DecByzPGConfig, T: int):
     """Returns history of honest mean returns, per-agent sample counts, and
     the honest parameter diameter trace (Lemma 1/2 diagnostic)."""
     ks = engine.seed_keys(cfg.seed)
-    unravel, _ = mlp_unraveler(env, cfg.hidden)
+    unravel, _ = policy_unraveler(resolve_policy(cfg, env))
     carry = init_decbyzpg_carry(env, cfg, ks.init)
     loop = fused_decbyzpg(env, cfg, T)
     hist = jax.block_until_ready(
@@ -229,7 +236,7 @@ def run_decbyzpg_legacy(env, cfg: DecByzPGConfig, T: int):
     pre-engine execution model, kept for the scan-vs-dispatch equivalence
     test and the ``bench_engine`` baseline."""
     ks = engine.seed_keys(cfg.seed)
-    unravel, _ = mlp_unraveler(env, cfg.hidden)
+    unravel, _ = policy_unraveler(resolve_policy(cfg, env))
     theta, theta_prev, opt = init_decbyzpg_carry(env, cfg, ks.init)
     step = jax.jit(build_decbyzpg_step(env, cfg), static_argnums=())
     step_keys = jax.random.split(ks.loop, T)

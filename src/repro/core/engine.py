@@ -164,8 +164,9 @@ def lane_split(cfg, traced_fields):
     representative and therefore share one compiled program.
     ``traced_names``/``traced_values`` are the matching flat operand
     vector: the algorithm's ``traced_fields`` (derived properties like
-    ``switch_p`` read but not blanked) followed by the attack's
-    traced-marked kwargs as ``"attack.<kwarg>"``.
+    ``switch_p`` read but not blanked) followed by each batchable
+    component field's traced-marked kwargs as ``"<namespace>.<kwarg>"``
+    (attacks and aggregators — e.g. ``rfa(nu=…)`` sweeps lane-batch).
     """
     from repro.core.registry import REGISTRY
     traced = {name: float(getattr(cfg, name)) for name in traced_fields}
@@ -175,11 +176,14 @@ def lane_split(cfg, traced_fields):
         # p reaches the program only through the traced switch_p, so
         # p=None (default B/N) and an explicit equal p share a signature
         repl["p"] = None
-    if "attack" in fields:
-        static_attack, att = REGISTRY.split_traced("attack", cfg.attack)
-        repl["attack"] = static_attack
-        for k, v in sorted(att.items()):
-            traced[f"attack.{k}"] = v
+    # component spec fields whose registry namespace marks traced_kwargs;
+    # field name == namespace for both of them
+    for ns in ("attack", "aggregator"):
+        if ns in fields:
+            static_spec, kw = REGISTRY.split_traced(ns, getattr(cfg, ns))
+            repl[ns] = static_spec
+            for k, v in sorted(kw.items()):
+                traced[f"{ns}.{k}"] = v
     static_cfg = dataclasses.replace(cfg, seed=0, **repl)
     names = tuple(traced)
     return static_cfg, names, tuple(traced[n] for n in names)

@@ -197,6 +197,7 @@ _PROVIDERS: Dict[str, Tuple[str, ...]] = {
     "env": ("repro.rl.envs",),
     "topology": ("repro.topology.graphs",),
     "algo": ("repro.core.decbyzpg", "repro.core.byzpg"),
+    "policy": ("repro.rl.policy", "repro.rl.transformer_policy"),
     "fed_aggregator": ("repro.distributed.aggregation",),
     "fed_attack": ("repro.distributed.aggregation",),
     "kernel": ("repro.kernels.pairwise_dist.ops",

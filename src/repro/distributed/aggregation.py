@@ -17,6 +17,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.registry import Spec, register, resolve
 
@@ -128,6 +129,89 @@ def stacked_mix(W: jnp.ndarray, tree, mix_dtype=None, block: int = 0):
 def _broadcast_rows(tree_single, K: int):
     return jax.tree.map(
         lambda l: jnp.broadcast_to(l[None], (K,) + l.shape), tree_single)
+
+
+# ---------------------------------------------------------------------------
+# Sharded flat-(K, D) execution layer
+# ---------------------------------------------------------------------------
+# The registry aggregators (``repro.core.aggregators``) route here when
+# their (K, D) input carries a NamedSharding that splits D over more than
+# one device: all vector math runs through local-shard Gram contributions
+# (one K² psum) and shard-local weighted sums / coordinate-wise reduces, so
+# the full stack is never gathered to a device — per-device footprint is
+# O(K² + K·D/devices). A bare (K, D) array is a valid single-leaf tree, so
+# these reuse ``stacked_gram``/``stacked_gram_blocked`` directly.
+
+def dim_sharded(x, axis: int = -1) -> bool:
+    """True when ``x`` is a concrete array whose ``axis`` is split by a
+    NamedSharding over more than one device.
+
+    Trace-time tracers have no sharding — inside jit callers must pass
+    their ``sharded=`` intent explicitly (the detection is eager-only by
+    design: dispatch is a trace-time decision, like the kernel backend).
+    """
+    try:
+        sh = x.sharding
+    except Exception:
+        return False
+    if not isinstance(sh, jax.sharding.NamedSharding):
+        return False
+    spec = sh.spec
+    ax = axis % max(x.ndim, 1)
+    if len(spec) <= ax or spec[ax] is None:
+        return False
+    names = spec[ax] if isinstance(spec[ax], tuple) else (spec[ax],)
+    return int(np.prod([sh.mesh.shape[n] for n in names])) > 1
+
+
+def flat_sq_dists(x: jnp.ndarray, block: int = 0) -> jnp.ndarray:
+    """(K, D) -> (K, K) squared distances via the shard-local Gram path."""
+    g = stacked_gram_blocked(x, block) if block else stacked_gram(x)
+    sq = jnp.diag(g)
+    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * g, 0.0)
+
+
+def flat_krum(x: jnp.ndarray, n_byz: int, m: int = 1,
+              block: int = 0) -> jnp.ndarray:
+    """(Multi-)Krum on a sharded flat stack: scores from the K×K Gram
+    matrix; the m-way selection is a (K,) weighted sum, which keeps the
+    winner's D-sharding instead of gathering rows."""
+    from repro.kernels.krum_score.ref import scores_from_d2
+    K = x.shape[0]
+    scores = scores_from_d2(flat_sq_dists(x, block), max(K - n_byz - 2, 1))
+    if m == 1:
+        w = jax.nn.one_hot(jnp.argmin(scores), K, dtype=jnp.float32)
+    else:
+        _, idx = jax.lax.top_k(-scores, m)
+        w = jnp.zeros((K,), jnp.float32).at[idx].set(1.0 / m)
+    return stacked_weighted_sum(w, x)
+
+
+def flat_rfa(x: jnp.ndarray, n_iter: int = 32, nu=1e-6,
+             block: int = 0) -> jnp.ndarray:
+    """Smoothed Weiszfeld on a sharded flat stack: the iteration runs
+    entirely in (K,) weight space from the Gram matrix (same decomposition
+    as the Pallas kernel); one final weighted sum materializes z."""
+    K = x.shape[0]
+    g = stacked_gram_blocked(x, block) if block else stacked_gram(x)
+    sq = jnp.diag(g)
+
+    def body(_, w):
+        gw = g @ w
+        d2 = jnp.maximum(sq - 2.0 * gw + w @ gw, 0.0)
+        iw = 1.0 / jnp.sqrt(d2 + nu)
+        return iw / jnp.sum(iw)
+
+    w = jax.lax.fori_loop(0, n_iter, body,
+                          jnp.full((K,), 1.0 / K, jnp.float32))
+    return stacked_weighted_sum(w, x)
+
+
+def flat_trimmed_mean(x: jnp.ndarray, n_trim: int) -> jnp.ndarray:
+    """Coordinate-wise trimmed mean — shard-local by construction; runs
+    the oracle's rank-network body (bit-identical to the kernel)."""
+    from repro.kernels.trimmed_mean.ref import trimmed_mean as tm_ref
+    return tm_ref(x, n_trim)
 
 
 # ---------------------------------------------------------------------------

@@ -185,6 +185,122 @@ def make_fed_step(cfg: ModelConfig, fed: FedConfig, mesh, *, large: bool,
     return step, state_shape, batch, (state_sh, batch_sh, rep)
 
 
+# ---------------------------------------------------------------------------
+# Flat (K, D) federated trainer — transformer-scale robust aggregation
+# ---------------------------------------------------------------------------
+# The tree-shaped trainer above keeps each leaf model-sharded by the leaf
+# rules. The flat trainer instead ravels every agent's parameters into one
+# (K, D) stack with D sharded over the "model" axis — the layout the
+# registry aggregators' sharded execution layer (DESIGN.md §3,
+# ``repro.distributed.aggregation``) operates on: robust aggregation costs
+# one K² psum plus shard-local weighted sums, never a parameter gather.
+
+
+class FlatFedState(NamedTuple):
+    theta: jnp.ndarray   # (K, D) flat agent-stacked params (D-sharded)
+    prev: jnp.ndarray
+    v: jnp.ndarray       # running PAGE direction, (K, D)
+    opt_state: object
+    step: jnp.ndarray
+
+
+def flat_param_sharding(mesh):
+    """NamedSharding splitting the trailing D axis of (K, D) stacks over
+    the mesh's "model" axis (agents replicated)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return NamedSharding(mesh, P(None, "model"))
+
+
+def init_flat_fed_state(cfg: ModelConfig, fed: FedConfig, K: int, key,
+                        dtype=jnp.float32, mesh=None):
+    """Common-init flat state. Returns ``(state, unravel)`` where
+    ``unravel(row) -> params tree`` recovers one agent's parameters.
+
+    With a mesh whose "model" axis spans >1 device, the (K, D) stacks are
+    placed D-sharded, which is what routes the registry aggregators onto
+    the sharded Gram path.
+    """
+    from jax.flatten_util import ravel_pytree
+    vec0, unravel = ravel_pytree(init_params(cfg, key, dtype))
+    theta = jnp.tile(vec0, (K, 1))
+    if mesh is not None and mesh.shape.get("model", 1) > 1:
+        theta = jax.device_put(theta, flat_param_sharding(mesh))
+    opt = get_optimizer(fed.optimizer, fed.lr, maximize=False)
+    return FlatFedState(theta, jnp.array(theta), jnp.zeros_like(theta),
+                        jax.vmap(opt.init)(theta),
+                        jnp.zeros((), jnp.int32)), unravel
+
+
+def flat_fed_state_shardings(mesh, state_shape: FlatFedState):
+    """NamedShardings for a FlatFedState shape tree: every (K, D) stack
+    D-sharded, scalar counters replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rep = NamedSharding(mesh, P())
+    sh = flat_param_sharding(mesh)
+    opt_sh = jax.tree.map(
+        lambda l: sh if getattr(l, "ndim", 0) == 2 else rep,
+        state_shape.opt_state)
+    return FlatFedState(sh, sh, sh, opt_sh, rep)
+
+
+def fed_train_step_flat(cfg: ModelConfig, fed: FedConfig,
+                        state: FlatFedState, unravel, batch, byz_mask,
+                        key, *, large, sharded: Optional[bool] = None
+                        ) -> tuple:
+    """One federated step on the flat (K, D) stack.
+
+    Same protocol as :func:`fed_train_step` (PAGE → attack → robust
+    aggregate → per-agent optimizer → GDA agreement), but the aggregation
+    runs the *registry* aggregators (``repro.core.aggregators``) over the
+    flat stack. ``sharded=True`` forces their sharded Gram path from
+    inside jit (detection is eager-only); the aggregate is broadcast back
+    to all K rows, matching the broadcast-consistent adversary of the
+    tree path.
+    """
+    from repro.core.registry import resolve as _resolve
+
+    def loss_vec(vec, b):
+        return _loss(cfg, unravel(vec), b)
+
+    losses, g_new = jax.vmap(jax.value_and_grad(loss_vec))(state.theta,
+                                                           batch)
+
+    def _page(_):
+        g_old = jax.vmap(jax.grad(loss_vec))(state.prev, batch)
+        return g_new - g_old + state.v
+
+    if isinstance(large, (bool, int)):
+        tilde_v = g_new if large else _page(None)
+    else:
+        tilde_v = jax.lax.cond(large, lambda _: g_new, _page, None)
+
+    K = byz_mask.shape[0]
+    k_att, k_agg = jax.random.split(key)
+    if K == 1:
+        v = tilde_v
+    else:
+        tilde_v = agg_lib.attack_stacked(fed.attack, tilde_v, byz_mask,
+                                         k_att)
+        agg = _resolve("aggregator", fed.aggregator, K=K, n_byz=fed.n_byz,
+                       sharded=sharded)
+        v = jnp.broadcast_to(agg(tilde_v, k_agg)[None], state.theta.shape)
+
+    opt = get_optimizer(fed.optimizer, fed.lr, maximize=False)
+    new_theta, new_opt = jax.vmap(opt.update)(v, state.opt_state,
+                                              state.theta)
+    mix_dtype = jnp.bfloat16 if fed.mix_dtype == "bfloat16" else None
+    new_theta = agg_lib.gda_agree(new_theta, fed.kappa, fed.alpha_bar,
+                                  mix_dtype=mix_dtype, block=fed.mix_block)
+    metrics = {
+        "loss": jnp.mean(jnp.where(byz_mask, 0.0, losses))
+        * K / jnp.maximum(jnp.sum(~byz_mask), 1),
+        "diameter": (jnp.zeros(()) if K == 1 else jnp.sqrt(jnp.max(
+            agg_lib.stacked_sq_dists(new_theta)))),
+    }
+    return FlatFedState(new_theta, state.theta, v, new_opt,
+                        state.step + 1), metrics
+
+
 def fed_coin_key(fed: FedConfig):
     """Coin key of the fused window's in-scan Common-Sample stream (the
     per-step replay in tests derives identical coins from it)."""

@@ -14,7 +14,16 @@ Backend selection, most specific wins:
 1. per-call ``backend=`` keyword,
 2. the process-global override (:func:`set_backend` / :func:`use_backend`),
 3. the ``REPRO_KERNEL_BACKEND`` environment variable,
-4. auto: ``"pallas"`` on TPU, ``"jnp"`` elsewhere.
+4. auto: ``"pallas"`` on TPU, ``"jnp"`` elsewhere — with a per-kernel
+   size-threshold fallback: below ``auto_jnp_below`` operand elements
+   (declared at registration, calibrated from BENCH_kernels.json) the
+   launch/interpret overhead dominates and auto picks ``"jnp"`` even on
+   TPU. Explicit overrides (1-3) are never second-guessed.
+
+The d-tiled kernels accept a ``block_d=`` slab width (the VMEM tile along
+the parameter dimension). It is a Pallas tiling knob only, so the
+dispatcher strips it before calling the ``jnp`` oracle — parity across
+backends holds by construction for every ``block_d``.
 
 Selection is a trace-time (Python-level) decision, so a jitted caller bakes
 the chosen backend into the compiled program; re-jit (a fresh closure) to
@@ -88,40 +97,72 @@ class Kernel:
 
     ``pallas`` and ``pallas-interpret`` share one implementation taking an
     ``interpret`` keyword; ``jnp`` is the oracle. All other arguments pass
-    through unchanged, so a Kernel is call-compatible with its oracle plus
-    an optional ``backend=`` keyword.
+    through unchanged — except the Pallas tiling knob ``block_d``, which
+    is dropped for the oracle — so a Kernel is call-compatible with its
+    oracle plus optional ``backend=`` / ``block_d=`` keywords.
+
+    ``auto_jnp_below`` (element count of the first operand) is the
+    auto-mode fallback threshold: when no per-call/global/env override is
+    active and auto would pick Pallas, operands smaller than this run the
+    oracle instead (kernel launch overhead dominates tiny stacks).
     """
 
-    __slots__ = ("name", "_jnp", "_pallas")
+    __slots__ = ("name", "_jnp", "_pallas", "auto_jnp_below")
 
-    def __init__(self, name: str, jnp_impl: Callable, pallas_impl: Callable):
+    def __init__(self, name: str, jnp_impl: Callable, pallas_impl: Callable,
+                 auto_jnp_below: int = 0):
         self.name = name
         self._jnp = jnp_impl
         self._pallas = pallas_impl
+        self.auto_jnp_below = auto_jnp_below
 
     def impl(self, backend: Optional[str] = None) -> Callable:
         b = _check_backend(backend) if backend else current_backend()
         if b == "jnp":
-            return self._jnp
+            return lambda *a, **kw: self._jnp(
+                *a, **{k: v for k, v in kw.items() if k != "block_d"})
         if b == "pallas-interpret":
             return lambda *a, **kw: self._pallas(*a, interpret=True, **kw)
         return lambda *a, **kw: self._pallas(*a, interpret=False, **kw)
 
+    def resolve_backend(self, *args, backend: Optional[str] = None) -> str:
+        """The backend this call would dispatch to (trace-time decision).
+
+        Explicit choices (per-call, global, env var) pass through
+        untouched; only the pure-auto path applies the size fallback,
+        reading the first operand's static element count.
+        """
+        if backend:
+            return _check_backend(backend)
+        if _GLOBAL_BACKEND:
+            return _GLOBAL_BACKEND
+        if os.environ.get("REPRO_KERNEL_BACKEND"):
+            return default_backend()
+        b = default_backend()
+        if b == "pallas" and self.auto_jnp_below and args:
+            size = getattr(args[0], "size", None)
+            if size is not None and size < self.auto_jnp_below:
+                return "jnp"
+        return b
+
     def __call__(self, *args, backend: Optional[str] = None, **kwargs):
-        return self.impl(backend)(*args, **kwargs)
+        return self.impl(self.resolve_backend(*args, backend=backend)
+                         )(*args, **kwargs)
 
     def __repr__(self) -> str:
         return f"Kernel({self.name!r})"
 
 
 def register_kernel(name: str, *, jnp_impl: Callable, pallas_impl: Callable,
-                    **meta) -> Kernel:
+                    auto_jnp_below: int = 0, **meta) -> Kernel:
     """Create a :class:`Kernel` and file it under the ``kernel`` registry
-    namespace (metadata lands in ``REGISTRY.meta("kernel", name)``)."""
+    namespace (metadata, including ``auto_jnp_below``, lands in
+    ``REGISTRY.meta("kernel", name)``)."""
     from repro.core.registry import REGISTRY
-    k = Kernel(name, jnp_impl, pallas_impl)
+    k = Kernel(name, jnp_impl, pallas_impl, auto_jnp_below=auto_jnp_below)
     _KERNELS[name] = k
-    REGISTRY.register("kernel", name, **meta)(lambda _k=k: _k)
+    REGISTRY.register("kernel", name, auto_jnp_below=auto_jnp_below,
+                      **meta)(lambda _k=k: _k)
     return k
 
 

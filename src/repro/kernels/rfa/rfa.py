@@ -30,8 +30,9 @@ from jax.experimental import pallas as pl
 from repro.kernels.pairwise_dist.pairwise_dist import gram
 
 
-def _weiszfeld_kernel(n_iter, nu, K, g_ref, w_ref):
+def _weiszfeld_kernel(n_iter, K, g_ref, nu_ref, w_ref):
     G = g_ref[...]                                       # (Kp, Kp) f32
+    nu = nu_ref[0, 0]                # traced operand: lane-batchable sweeps
     Kp = G.shape[0]
     valid = jax.lax.broadcasted_iota(jnp.int32, (Kp, 1), 0) < K
     eye = (jax.lax.broadcasted_iota(jnp.int32, (Kp, Kp), 0)
@@ -58,22 +59,28 @@ def _wsum_kernel(x_ref, w_ref, o_ref):
                                      preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("n_iter", "nu", "block_d",
+@functools.partial(jax.jit, static_argnames=("n_iter", "block_d",
                                              "interpret"))
-def rfa_pallas(x: jnp.ndarray, n_iter: int = 32, nu: float = 1e-6,
+def rfa_pallas(x: jnp.ndarray, n_iter: int = 32, nu=1e-6,
                block_d: int = 512, interpret: bool = True) -> jnp.ndarray:
-    """x: (K, d) -> (d,) smoothed geometric median (Gram-space Weiszfeld)."""
+    """x: (K, d) -> (d,) smoothed geometric median (Gram-space Weiszfeld).
+
+    ``nu`` is a *traced* operand (scalar or 0-d array), not a static
+    argument: an ``rfa(nu=...)`` lane sweep shares one compiled program.
+    """
     K, d = x.shape
     Kp = -(-K // 8) * 8
     G = jnp.pad(gram(x, block_d=block_d, interpret=interpret),
                 ((0, Kp - K), (0, Kp - K)))
+    nu_arr = jnp.broadcast_to(jnp.asarray(nu, jnp.float32), (1, 1))
     w = pl.pallas_call(
-        functools.partial(_weiszfeld_kernel, n_iter, nu, K),
-        in_specs=[pl.BlockSpec((Kp, Kp), lambda: (0, 0))],
+        functools.partial(_weiszfeld_kernel, n_iter, K),
+        in_specs=[pl.BlockSpec((Kp, Kp), lambda: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda: (0, 0))],
         out_specs=pl.BlockSpec((Kp, 128), lambda: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((Kp, 128), jnp.float32),
         interpret=interpret,
-    )(G)
+    )(G, nu_arr)
     dp = -(-d // block_d) * block_d
     xp = jnp.pad(x, ((0, Kp - K), (0, dp - d)))
     z = pl.pallas_call(

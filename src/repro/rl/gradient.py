@@ -8,13 +8,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.registry import register, resolve
-from repro.rl.policy import mlp_logits
+from repro.rl.policy import policy_logits
 from repro.rl.rollout import Trajectory
 
 
 def step_log_probs(params, traj: Trajectory, activation="tanh"):
-    """(H,) log π_θ(a_h | s_h), masked."""
-    logits = mlp_logits(params, traj.obs, activation)       # (H, A)
+    """(H,) log π_θ(a_h | s_h), masked. ``activation`` is a policy logits
+    spec — an MLP activation string or a callable (params, obs) ->
+    logits."""
+    logits = policy_logits(params, traj.obs, activation)    # (H, A)
     lp = jax.nn.log_softmax(logits)
     lp = jnp.take_along_axis(lp, traj.actions[..., None], axis=-1)[..., 0]
     return lp * traj.mask

@@ -1,9 +1,70 @@
-"""Categorical MLP policies (paper Table 1: 16,16 ReLU for CartPole,
-64,64 Tanh for LunarLander)."""
+"""Categorical policies (paper Table 1: 16,16 ReLU for CartPole,
+64,64 Tanh for LunarLander — plus the registry ``policy`` namespace that
+lets a config name any logits model, e.g. a transformer from
+``repro/models`` whose params ravel into the same flat θ stack).
+
+A :class:`Policy` couples an ``init(key) -> params`` with a *logits spec*:
+either an activation string (the historical MLP path — numerics and
+compiled programs are unchanged) or a callable
+``logits(params, obs) -> (..., n_actions)``. The rollout/gradient code
+accepts both via :func:`policy_logits`.
+"""
 from __future__ import annotations
+
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.registry import register, resolve
+
+
+class Policy(NamedTuple):
+    """A resolved policy: parameter init + how to compute action logits.
+
+    ``logits`` is either an activation name (str — run the MLP stack) or a
+    callable ``(params, obs) -> logits`` (arbitrary models; obs may carry
+    leading batch dims).
+    """
+    init: Callable
+    logits: object
+
+
+def policy_logits(params, obs, logits="tanh"):
+    """Dispatch on the logits spec: activation string -> MLP; callable ->
+    the policy's own model."""
+    if callable(logits):
+        return logits(params, obs)
+    return mlp_logits(params, obs, logits)
+
+
+def policy_unraveler(policy: Policy):
+    """(unravel_fn, d) for the flat policy vector — from a template init
+    (shapes only, seed-free), shared by the fused training loops."""
+    from jax.flatten_util import ravel_pytree
+    vec, unravel = ravel_pytree(policy.init(jax.random.PRNGKey(0)))
+    return unravel, vec.shape[0]
+
+
+@register("policy", "mlp")
+def _mlp_policy_factory(env, hidden=None, activation=None,
+                        cfg_hidden=(16, 16), cfg_activation="tanh"):
+    """The default policy. ``cfg_hidden``/``cfg_activation`` carry the
+    algorithm config's fields; explicit spec kwargs
+    (``mlp(hidden=(32,32))``) win over them."""
+    h = tuple(cfg_hidden if hidden is None else hidden)
+    act = cfg_activation if activation is None else activation
+    return Policy(init=lambda key: init_mlp(key, mlp_sizes(env, h)),
+                  logits=act)
+
+
+def resolve_policy(cfg, env) -> Policy:
+    """Resolve an algorithm config's ``policy`` spec (``"mlp"`` when the
+    config predates the field), feeding ``cfg.hidden``/``cfg.activation``
+    as the MLP defaults."""
+    return resolve("policy", getattr(cfg, "policy", "mlp"), env=env,
+                   cfg_hidden=tuple(cfg.hidden),
+                   cfg_activation=cfg.activation)
 
 
 def mlp_sizes(env, hidden) -> tuple:

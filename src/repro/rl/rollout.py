@@ -6,7 +6,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.rl.policy import mlp_logits
+from repro.rl.policy import policy_logits
 
 
 class Trajectory(NamedTuple):
@@ -18,13 +18,15 @@ class Trajectory(NamedTuple):
 
 def sample_trajectory(env, params, key, activation="tanh",
                       logit_scale=1.0) -> Trajectory:
+    """``activation`` is a policy logits spec: an MLP activation string, or
+    a callable ``(params, obs) -> logits`` (e.g. a transformer policy)."""
     k_reset, k_steps = jax.random.split(key)
     s0 = env.reset(k_reset)
 
     def body(carry, k):
         s, alive = carry
         obs = env.observe(s)
-        logits = mlp_logits(params, obs, activation) * logit_scale
+        logits = policy_logits(params, obs, activation) * logit_scale
         a = jax.random.categorical(k, logits)
         s2, r, done = env.step(s, a)
         # freeze the state once done; mask future rewards

@@ -1,0 +1,88 @@
+"""Transformer policies: any ``repro/models`` architecture as the
+categorical policy network.
+
+Registered under the ``policy`` namespace as ``"transformer"``, so a
+``DecByzPGConfig(policy="transformer(arch='qwen2.5-3b')")`` trains a
+transformer whose parameters ravel into the same flat (K, D) stack the
+robust aggregators operate on — at a D where the Gram-space sharded
+aggregation path (DESIGN.md §3) is the only one that fits per device.
+
+The observation enters the model as a single projected prefix embedding
+(the config's modality-frontend slot): obs is written into the leading
+``obs_dim`` coordinates of a (B, 1, d_model) prefix, a BOS token anchors
+the text side, and the action logits are the first ``n_actions`` entries
+of the last-position LM head output.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, reduced
+from repro.core.registry import register
+from repro.models import forward, init_params
+from repro.rl.policy import Policy
+
+
+def transformer_policy_config(arch: str = "qwen2.5-3b", n_layers=None,
+                              d_model=None, n_heads=None, d_ff=None):
+    """Policy-sized model config: ``reduced(arch)`` with the modality
+    frontend enabled (one prefix embedding carries the observation).
+    Optional overrides shrink it further for tests."""
+    cfg = reduced(get_config(arch))
+    kw = {"frontend": "state", "n_prefix_embeds": 1}
+    if n_layers is not None:
+        kw["n_layers"] = int(n_layers)
+    if n_heads is not None:
+        kw["n_heads"] = int(n_heads)
+        kw["n_kv_heads"] = min(cfg.n_kv_heads, int(n_heads))
+    if d_model is not None:
+        kw["d_model"] = int(d_model)
+    if d_ff is not None:
+        kw["d_ff"] = int(d_ff)
+    if (d_model is not None or n_heads is not None) and cfg.mla is None:
+        d = kw.get("d_model", cfg.d_model)
+        h = kw.get("n_heads", cfg.n_heads)
+        if d % h:
+            raise ValueError(f"d_model={d} not divisible by n_heads={h}")
+        kw["head_dim"] = d // h
+    return dataclasses.replace(cfg, **kw)
+
+
+@register("policy", "transformer")
+def _transformer_policy_factory(env, arch: str = "qwen2.5-3b",
+                                n_layers=None, d_model=None, n_heads=None,
+                                d_ff=None, remat: bool = False):
+    """``policy="transformer(arch='qwen2.5-3b', n_layers=1, ...)"``.
+
+    ``remat`` defaults off: the policy runs on length-2 sequences where
+    checkpointing each layer only adds recompute.
+    """
+    cfg = transformer_policy_config(arch, n_layers=n_layers,
+                                    d_model=d_model, n_heads=n_heads,
+                                    d_ff=d_ff)
+    if cfg.d_model < env.obs_dim:
+        raise ValueError(f"transformer policy d_model={cfg.d_model} < "
+                         f"obs_dim={env.obs_dim} for env {env.name!r}")
+    if cfg.vocab_size < env.n_actions:
+        raise ValueError(f"transformer policy vocab_size={cfg.vocab_size} "
+                         f"< n_actions={env.n_actions}")
+    n_actions = env.n_actions
+    obs_dim = env.obs_dim
+
+    def logits_fn(params, obs):
+        """obs (..., obs_dim) -> logits (..., n_actions); leading dims are
+        flattened into the forward batch and restored."""
+        lead = obs.shape[:-1]
+        ob = obs.reshape((-1, obs_dim))
+        B = ob.shape[0]
+        prefix = jnp.zeros((B, 1, cfg.d_model), ob.dtype)
+        prefix = prefix.at[:, 0, :obs_dim].set(ob)
+        bos = jnp.zeros((B, 1), jnp.int32)
+        logits, _, _ = forward(cfg, params, tokens=bos,
+                               prefix_embeds=prefix, last_only=True,
+                               remat=remat)
+        return logits[:, -1, :n_actions].reshape((*lead, n_actions))
+
+    return Policy(init=lambda key: init_params(cfg, key), logits=logits_fn)

@@ -129,3 +129,52 @@ def test_global_backend_reroutes_aggregator():
         tm_p, rfa_p = trimmed_mean(x, 1), rfa(x, n_iter=8)
     np.testing.assert_allclose(tm_j, tm_p, atol=1e-6)
     np.testing.assert_allclose(rfa_j, rfa_p, atol=1e-4)
+
+
+def test_auto_size_threshold_falls_back_to_jnp(monkeypatch):
+    """Auto mode on TPU dispatches tiny stacks to the oracle: below a
+    kernel's ``auto_jnp_below`` first-operand element count the Pallas
+    launch overhead dominates, so auto picks jnp; at/above the cutoff it
+    stays on pallas. Every explicit choice bypasses the fallback."""
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND", raising=False)
+    monkeypatch.setattr(dispatch, "on_tpu", lambda: True)
+    k = dispatch.get_kernel("gossip_reduce")
+    assert k.auto_jnp_below == 8192
+    small = jnp.ones((8, 512))            # 4096 < 8192
+    big = jnp.ones((8, 2048))             # 16384 >= 8192
+    assert k.resolve_backend(small) == "jnp"
+    assert k.resolve_backend(big) == "pallas"
+    # per-call override wins over the size fallback
+    assert k.resolve_backend(small, backend="pallas") == "pallas"
+    # global override wins
+    with dispatch.use_backend("pallas-interpret"):
+        assert k.resolve_backend(small) == "pallas-interpret"
+    # env var wins
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "pallas")
+    assert k.resolve_backend(small) == "pallas"
+    # cutoff is per-kernel metadata, visible through the registry
+    assert REGISTRY.meta("kernel", "gossip_reduce")["auto_jnp_below"] == 8192
+    assert REGISTRY.meta("kernel", "neighbor_reduce")["auto_jnp_below"] \
+        == 32768
+
+
+def test_auto_threshold_inert_off_tpu(monkeypatch):
+    """Off-TPU auto already resolves to jnp; the size fallback never
+    flips anything."""
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND", raising=False)
+    monkeypatch.setattr(dispatch, "on_tpu", lambda: False)
+    k = dispatch.get_kernel("gossip_reduce")
+    assert k.resolve_backend(jnp.ones((8, 512))) == "jnp"
+    assert k.resolve_backend(jnp.ones((64, 4096))) == "jnp"
+
+
+def test_block_d_stripped_for_jnp_oracle():
+    """``block_d`` is a Pallas tiling knob: the oracle path drops it, so
+    one call site can pass it unconditionally across backends."""
+    from repro.kernels.rfa import ref as rfa_ref
+    x = jax.random.normal(KEY, (6, 130))
+    k = dispatch.get_kernel("rfa")
+    out_j = k(x, n_iter=4, block_d=64, backend="jnp")
+    np.testing.assert_array_equal(out_j, rfa_ref.rfa(x, n_iter=4))
+    out_p = k(x, n_iter=4, block_d=64, backend="pallas-interpret")
+    np.testing.assert_allclose(out_j, out_p, atol=1e-5, rtol=1e-5)

@@ -473,3 +473,55 @@ def test_experiment_matches_run_grid():
     for scn in legacy:
         np.testing.assert_array_equal(res[tuple(scn)]["returns"],
                                       legacy[scn]["returns"])
+
+
+def test_lane_split_traced_aggregator_kwargs():
+    """Aggregator hyperparameters declared traced (rfa.nu,
+    centered_clip.tau) batch into lanes exactly like attack.sigma:
+    configs differing only in the kwarg share one static representative
+    and the traced vector carries the per-lane values (factory default
+    filled in when the spec omits the kwarg)."""
+    from repro.core.registry import Spec
+    a = engine._algo("decbyzpg")
+    cfg1 = tiny_dec(aggregator="rfa(nu=1e-6)")
+    cfg2 = tiny_dec(aggregator="rfa(nu=1e-2)")
+    cfg3 = tiny_dec(aggregator="rfa")
+    s1, n1, v1 = engine.lane_split(cfg1, a.traced_fields)
+    s2, n2, v2 = engine.lane_split(cfg2, a.traced_fields)
+    s3, n3, v3 = engine.lane_split(cfg3, a.traced_fields)
+    assert s1 == s2 == s3 and n1 == n2 == n3
+    assert s1.aggregator == Spec("rfa")
+    tr1, tr2, tr3 = (dict(zip(n, v)) for n, v in
+                     ((n1, v1), (n2, v2), (n3, v3)))
+    assert tr1["aggregator.nu"] == 1e-6 and tr2["aggregator.nu"] == 1e-2
+    assert tr3["aggregator.nu"] == 1e-6          # factory default
+    # centered_clip.tau takes the same path
+    sa, na, va = engine.lane_split(
+        tiny_dec(aggregator="centered_clip(tau=0.5)"), a.traced_fields)
+    sb, nb, vb = engine.lane_split(
+        tiny_dec(aggregator="centered_clip(tau=2.0)"), a.traced_fields)
+    assert sa == sb and sa.aggregator == Spec("centered_clip")
+    assert dict(zip(na, va))["aggregator.tau"] == 0.5
+    assert dict(zip(nb, vb))["aggregator.tau"] == 2.0
+    # a static aggregator kwarg (n_iter) still splits the signature
+    sc, _, _ = engine.lane_split(tiny_dec(aggregator="rfa(n_iter=8)"),
+                                 a.traced_fields)
+    assert sc != s1
+
+
+def test_lane_grid_aggregator_kwarg_sweep_compiles_once():
+    """A robustness sweep over rfa's smoothing nu is ONE compiled program,
+    and each lane matches its per-scenario run."""
+    grid = ScenarioGrid(
+        seeds=(0, 1),
+        axes={"aggregator": ("rfa(nu=1e-6)", "rfa(nu=1e-3)",
+                             "rfa(nu=1e-1)")})
+    kw = dict(algo="decbyzpg", K=3, n_byz=1, attack="sign_flip",
+              agreement="gda", kappa=2, N=4, B=2, hidden=(8,))
+    engine.clear_cache()
+    lanes = run_grid(ENV, grid, T, lanes=True, **kw)
+    assert engine.compile_count() == 1
+    per = run_grid(ENV, grid, T, lanes=False, **kw)
+    for scn in per:
+        np.testing.assert_allclose(lanes[scn]["returns"],
+                                   per[scn]["returns"], atol=1e-5)

@@ -1,0 +1,111 @@
+"""Policy registry namespace: the MLP default's back-compat, the logits
+spec dispatch (string vs callable), and the transformer policy riding the
+flat θ stack through DecByzPG (tentpole (c) of the sharded-aggregation
+PR)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.decbyzpg import DecByzPGConfig, run_decbyzpg
+from repro.rl.envs import make_env
+from repro.rl.policy import (Policy, mlp_logits, policy_logits,
+                             policy_unraveler, resolve_policy)
+
+ENV = make_env("cartpole", horizon=10)
+KEY = jax.random.PRNGKey(0)
+
+TINY_TF = ("transformer(arch='qwen2.5-3b', d_model=32, n_layers=1, "
+           "n_heads=2, d_ff=64)")
+
+
+def test_policy_logits_string_is_mlp():
+    from repro.rl.policy import init_mlp, mlp_sizes
+    params = init_mlp(KEY, mlp_sizes(ENV, (8,)))
+    obs = jax.random.normal(KEY, (5, ENV.obs_dim))
+    np.testing.assert_array_equal(policy_logits(params, obs, "relu"),
+                                  mlp_logits(params, obs, "relu"))
+
+
+def test_policy_logits_callable_dispatch():
+    fn = lambda params, obs: params["w"] * obs.sum(-1, keepdims=True)
+    got = policy_logits({"w": jnp.float32(2.0)},
+                        jnp.ones((3, 4)), fn)
+    np.testing.assert_array_equal(got, 8.0 * jnp.ones((3, 1)))
+
+
+def test_mlp_policy_matches_legacy_fields():
+    """resolve_policy('mlp') reproduces the historical init_mlp/activation
+    wiring from the config's hidden/activation fields; explicit spec
+    kwargs win."""
+    from repro.rl.policy import mlp_unraveler
+    cfg = DecByzPGConfig(hidden=(8, 8), activation="tanh")
+    pol = resolve_policy(cfg, ENV)
+    assert pol.logits == "tanh"
+    _, d = policy_unraveler(pol)
+    assert d == mlp_unraveler(ENV, (8, 8))[1]
+    cfg2 = DecByzPGConfig(policy="mlp(hidden=(4,), activation='relu')",
+                          hidden=(8, 8), activation="tanh")
+    pol2 = resolve_policy(cfg2, ENV)
+    assert pol2.logits == "relu"
+    assert policy_unraveler(pol2)[1] == mlp_unraveler(ENV, (4,))[1]
+
+
+def test_default_policy_field_preserves_decbyzpg_trace():
+    """Adding the policy field must not change the default path: an
+    explicit policy='mlp' is the same static config as the default, and
+    the run reuses the same compiled loop."""
+    kw = dict(K=3, n_byz=1, attack="sign_flip", aggregator="rfa",
+              agreement="gda", kappa=1, N=4, B=2, hidden=(8,))
+    out1 = run_decbyzpg(ENV, DecByzPGConfig(**kw), 3)
+    n = engine.compile_count()
+    out2 = run_decbyzpg(ENV, DecByzPGConfig(policy="mlp", **kw), 3)
+    assert engine.compile_count() == n
+    np.testing.assert_array_equal(out1["returns"], out2["returns"])
+
+
+def test_transformer_policy_logits_shapes():
+    pol = resolve_policy(DecByzPGConfig(policy=TINY_TF), ENV)
+    params = pol.init(KEY)
+    assert "frontend_proj" in params
+    obs1 = jax.random.normal(KEY, (ENV.obs_dim,))
+    obsB = jnp.stack([obs1] * 3)
+    l1 = policy_logits(params, obs1, pol.logits)
+    lB = policy_logits(params, obsB, pol.logits)
+    assert l1.shape == (ENV.n_actions,)
+    assert lB.shape == (3, ENV.n_actions)
+    np.testing.assert_allclose(lB[0], l1, atol=1e-6)
+    assert np.all(np.isfinite(np.asarray(lB)))
+
+
+def test_transformer_policy_rejects_small_model():
+    with pytest.raises(ValueError, match="d_model"):
+        resolve_policy(DecByzPGConfig(
+            policy="transformer(arch='qwen2.5-3b', d_model=2, n_heads=2)"),
+            ENV)
+
+
+@pytest.mark.slow
+def test_decbyzpg_transformer_end_to_end():
+    """DecByzPG trains a transformer policy through the full fused scan:
+    robust aggregation + agreement over the flat transformer stack, cache
+    hit on the repeat run."""
+    cfg = DecByzPGConfig(K=3, n_byz=1, attack="large_noise(sigma=10)",
+                         aggregator="rfa", agreement="gda", kappa=1,
+                         N=3, B=2, policy=TINY_TF)
+    out = run_decbyzpg(ENV, cfg, 2)
+    assert np.all(np.isfinite(out["returns"]))
+    assert np.all(np.isfinite(out["diameter"]))
+    n = engine.compile_count()
+    again = run_decbyzpg(ENV, cfg, 2)
+    assert engine.compile_count() == n
+    np.testing.assert_array_equal(out["returns"], again["returns"])
+
+
+def test_policy_spec_distinguishes_static_key():
+    a = engine._algo("decbyzpg")
+    s1, _, _ = engine.lane_split(DecByzPGConfig(), a.traced_fields)
+    s2, _, _ = engine.lane_split(DecByzPGConfig(policy=TINY_TF),
+                                 a.traced_fields)
+    assert s1 != s2

@@ -89,7 +89,8 @@ def run(smoke: bool = False) -> dict:
             rows += measure(*size, repeats=10)
     doc = {"bench": "topology", "backend": jax.default_backend(),
            "smoke": smoke, "method": "gda",
-           "attack": "per_receiver large_noise(sigma=50)", "rows": rows}
+           "attack": "large_noise(sigma=50)", "per_receiver": True,
+           "rows": rows}
     # smoke runs get their own file so a CI-sized run can't silently
     # replace the tracked full-ladder baseline
     name = "BENCH_topology_smoke.json" if smoke else "BENCH_topology.json"

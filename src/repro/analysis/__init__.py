@@ -1,0 +1,24 @@
+"""JAX-aware static analysis for the repro codebase.
+
+Two layers (DESIGN.md §7):
+
+* **Program passes** walk the *real* compiled-program builders:
+  :mod:`repro.analysis.keycheck` (PRNG-key discipline in jaxprs),
+  :mod:`repro.analysis.retrace` (compile-count / static-key hygiene),
+  :mod:`repro.analysis.donation` (donated-buffer aliasing),
+  :mod:`repro.analysis.memcheck` (declarative per-program memory contracts).
+* **AST lint** (:mod:`repro.analysis.lint`) enforces repo conventions on
+  source text: no literal ``PRNGKey`` in library code, spec strings must
+  resolve against the registry (including README/DESIGN code fences),
+  ``pallas_call`` only under ``repro/kernels/``, no host ``numpy`` on traced
+  values in hot modules, no tracked smoke-benchmark artifacts.
+
+Run everything with ``python -m repro.analysis`` (exit 1 on any finding),
+or individual passes with ``--passes``.  Each pass is also exercised by a
+tier-1 pytest suite (``tests/test_analysis_*.py``) with deliberately broken
+fixtures proving the pass actually fires.
+"""
+
+from repro.analysis.findings import Finding, render
+
+__all__ = ["Finding", "render"]

@@ -1,0 +1,93 @@
+"""``python -m repro.analysis`` — run the JAX-aware static-analysis suite.
+
+Runs every pass (or a ``--passes`` subset), prints findings as
+``path:line: [pass/rule] message`` and exits nonzero iff any pass found
+anything.  This is the tier-1 CI gate (see ``.github/workflows/ci.yml``);
+the same passes are unit-tested against deliberately-broken fixtures in
+``tests/test_analysis_*.py``.
+
+Passes
+------
+* ``lint``      AST lint over the repo (PRNG literals, spec strings,
+                pallas_call location, numpy-on-traced, smoke files)
+* ``keycheck``  jaxpr PRNG-key dataflow over the fused loop builders
+* ``retrace``   static cache-key hygiene + dynamic compile-count gate
+* ``donation``  forced-donation aliasing audit of donate_argnums sites
+* ``memcheck``  per-device memory contracts on a faked multi-device mesh
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _pass_lint():
+    from repro.analysis import lint
+    return lint.run()
+
+
+def _pass_keycheck():
+    from repro.analysis import keycheck
+    return keycheck.run()
+
+
+def _pass_retrace():
+    from repro.analysis import retrace
+    return retrace.run()
+
+
+def _pass_donation():
+    from repro.analysis import donation
+    return donation.run()
+
+
+def _pass_memcheck():
+    from repro.analysis import memcheck
+    return memcheck.run()
+
+
+# cheap/pure passes first so a lint failure reports before the slow
+# trace/compile passes run
+PASSES = {
+    "lint": _pass_lint,
+    "keycheck": _pass_keycheck,
+    "retrace": _pass_retrace,
+    "donation": _pass_donation,
+    "memcheck": _pass_memcheck,
+}
+
+
+def main(argv=None) -> int:
+    from repro.analysis.findings import render
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX-aware static-analysis suite (see repro.analysis)")
+    parser.add_argument(
+        "--passes", default=",".join(PASSES),
+        help="comma-separated subset of: " + ", ".join(PASSES))
+    args = parser.parse_args(argv)
+    names = [p.strip() for p in args.passes.split(",") if p.strip()]
+    unknown = [p for p in names if p not in PASSES]
+    if unknown:
+        parser.error(f"unknown pass(es): {', '.join(unknown)}")
+
+    all_findings = []
+    for name in names:
+        t0 = time.monotonic()
+        findings = PASSES[name]()
+        dt = time.monotonic() - t0
+        status = "ok" if not findings else f"{len(findings)} finding(s)"
+        print(f"[analysis] {name:<9} {status} ({dt:.1f}s)", file=sys.stderr)
+        all_findings.extend(findings)
+    if all_findings:
+        print(render(all_findings))
+        return 1
+    print(f"[analysis] clean: {len(names)} pass(es), 0 findings",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,213 @@
+"""Donation audit: every ``donate_argnums`` site must fully alias.
+
+A donated buffer that XLA cannot reuse for an output is pure dead weight:
+the caller's arrays are invalidated, a "donated buffers were not usable"
+warning fires on device backends, and no memory is saved.  On CPU the
+engine's :func:`repro.core.engine.donate_args` disables donation by
+policy, so nothing in the regular test suite would ever catch a
+non-aliasable donation shipped to TPU.  This pass therefore re-compiles
+each donation site with its donation *forced* (bypassing the CPU guard)
+and checks, per site:
+
+* no "donated buffers were not usable" warning during lowering/compile;
+* ``memory_analysis().alias_size_in_bytes`` equals the byte size of the
+  donated arguments — every donated byte is reused for an output;
+* the declared argnums still match the site's source (drift check), so
+  this registry cannot silently rot.
+
+Sites: the fused algo loops (``fused_decbyzpg``/``fused_byzpg``), the
+fused federated window (``launch/train.py``), the sharded federated step
+(``make_fed_step``) and the serving decode step (``make_serve_fns``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+import warnings
+from pathlib import Path
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding
+
+_UNUSABLE = "donated buffers were not usable"
+
+
+@dataclasses.dataclass(frozen=True)
+class Site:
+    """One donation site: where it lives, which argnums it donates, and a
+    builder returning ``(fn, example_args)`` for a forced-donation
+    compile."""
+    name: str
+    path: str                    # repo-relative source file
+    donate_argnums: tuple
+    build: Callable              # () -> (fn, args tuple)
+    # regex that must match the site's source if the argnums still agree
+    source_pattern: str
+
+
+def _bytes_of(tree) -> int:
+    leaves = jax.tree.leaves(tree)
+    return sum(
+        math.prod(l.shape) * jnp.dtype(l.dtype).itemsize for l in leaves)
+
+
+def _compile_with_donation(fn, args, donate_argnums):
+    jitted = jax.jit(fn, donate_argnums=donate_argnums)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        compiled = jitted.lower(*args).compile()
+    msgs = [str(w.message) for w in caught if _UNUSABLE in str(w.message)]
+    return compiled, msgs
+
+
+def check_site(site: Site, root: Optional[Path] = None) -> list:
+    from repro.analysis.lint import repo_root
+    root = root or repo_root()
+    findings = []
+
+    def bad(rule, msg):
+        findings.append(Finding("donation", rule, site.path, 0,
+                                f"[{site.name}] {msg}"))
+
+    src_path = root / site.path
+    if src_path.is_file():
+        if not re.search(site.source_pattern, src_path.read_text()):
+            bad("site-drift",
+                f"declared donate_argnums {site.donate_argnums} no longer "
+                f"match the source (pattern {site.source_pattern!r} not "
+                f"found) — update the repro.analysis.donation site "
+                f"registry")
+            return findings
+    fn, args = site.build()
+    compiled, unusable = _compile_with_donation(fn, args,
+                                                site.donate_argnums)
+    if unusable:
+        bad("unusable-donation",
+            f"XLA could not reuse every donated buffer: "
+            f"{unusable[0][:300]}")
+    ma = compiled.memory_analysis()
+    donated = sum(_bytes_of(args[i]) for i in site.donate_argnums)
+    aliased = getattr(ma, "alias_size_in_bytes", None)
+    if aliased is not None and aliased < donated:
+        bad("partial-alias",
+            f"only {aliased} of {donated} donated bytes alias an output "
+            f"— non-aliasable donated args are dead weight; donate only "
+            f"the carries that come back out")
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Site registry
+# ---------------------------------------------------------------------------
+
+
+def _algo_site(algo: str):
+    from repro.core import engine
+    from repro.rl.envs import make_env
+    env = make_env("cartpole(horizon=12)")
+    if algo == "decbyzpg":
+        from repro.core.decbyzpg import (DecByzPGConfig,
+                                         build_decbyzpg_loop,
+                                         init_decbyzpg_carry)
+        cfg = DecByzPGConfig(K=3, n_byz=1, N=3, B=2, kappa=1,
+                             agreement="gda", hidden=(8,))
+        build, init = build_decbyzpg_loop, init_decbyzpg_carry
+    else:
+        from repro.core.byzpg import (ByzPGConfig, build_byzpg_loop,
+                                      init_byzpg_carry)
+        cfg = ByzPGConfig(K=3, n_byz=1, N=3, B=2, hidden=(8,))
+        build, init = build_byzpg_loop, init_byzpg_carry
+    T = 2
+    ks = engine.seed_keys(0)
+    carry = init(env, cfg, ks.init)
+    loop = build(env, cfg, T)
+    return loop, (*carry, jax.random.split(ks.loop, T), ks.coin)
+
+
+def _fed_shapes():
+    from repro.configs import get_config, reduced
+    from repro.distributed.fed_trainer import FedConfig, init_fed_state
+    cfg = reduced(get_config("llama3_2_1b"))
+    fed = FedConfig(aggregator="rfa", kappa=1, n_byz=0)
+    K = 2
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    state = jax.eval_shape(lambda k: init_fed_state(cfg, fed, K, k), key)
+    batch = {"tokens": jax.ShapeDtypeStruct((K, 2, 16), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((K, 2, 16), jnp.int32)}
+    mask = jax.ShapeDtypeStruct((K,), jnp.bool_)
+    return cfg, fed, K, key, state, batch, mask
+
+
+def _fed_window_site():
+    from repro.distributed.fed_trainer import fed_train_window
+    cfg, fed, K, key, state, batch, mask = _fed_shapes()
+    W = 2
+    batches = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((W,) + s.shape, s.dtype), batch)
+    ts = jax.ShapeDtypeStruct((W,), jnp.int32)
+    fn = lambda s, b, m, t, k: fed_train_window(cfg, fed, s, b, m, t, k)
+    return fn, (state, batches, mask, ts, key)
+
+
+def _fed_step_site():
+    from repro.distributed.fed_trainer import make_fed_step
+    cfg, fed, K, key, state, batch, mask = _fed_shapes()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    step, state_shape, batch_shape, _ = make_fed_step(
+        cfg, fed, mesh, large=True, per_agent_batch=2, seq_len=16,
+        key=key)
+    K = jax.tree.leaves(state_shape.params)[0].shape[0]
+    mask = jax.ShapeDtypeStruct((K,), jnp.bool_)
+    # make_fed_step already jits with donate_argnums=(0,); rebuild the
+    # same lambda so the audit controls (and forces) the donation.  The
+    # large=False (PAGE) variant is the one that reads every FedState
+    # leaf — under large=True XLA dead-code-eliminates prev_params/v, and
+    # a DCE'd input can never alias, so full aliasing is only a meaningful
+    # contract on the full-read program.
+    from repro.distributed.fed_trainer import fed_train_step
+    fn = lambda s, b, m, k: fed_train_step(cfg, fed, s, b, m, k,
+                                           large=False)
+    return fn, (state_shape, batch_shape, mask, key)
+
+
+def _serving_site():
+    from repro.configs import get_config, reduced
+    from repro.distributed.serving import make_serve_fns
+    from repro.models.model import decode_step
+    cfg = reduced(get_config("llama3_2_1b"))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    _, _, specs = make_serve_fns(cfg, mesh, batch=2, seq_len=32, key=key)
+    tok = jax.ShapeDtypeStruct((2, 1), jnp.int32)
+    fn = lambda p, t, c: decode_step(cfg, p, t, c)
+    return fn, (specs["params_shape"], tok, specs["cache_shape"])
+
+
+def sites() -> list:
+    return [
+        Site("fused_decbyzpg", "src/repro/core/decbyzpg.py", (0,),
+             lambda: _algo_site("decbyzpg"),
+             r"donate_argnums=engine\.donate_args\(0\)"),
+        Site("fused_byzpg", "src/repro/core/byzpg.py", (0,),
+             lambda: _algo_site("byzpg"),
+             r"donate_argnums=engine\.donate_args\(0\)"),
+        Site("fed_train_window", "src/repro/launch/train.py", (0,),
+             _fed_window_site,
+             r"donate_argnums=engine\.donate_args\(0\)"),
+        Site("make_fed_step", "src/repro/distributed/fed_trainer.py",
+             (0,), _fed_step_site, r"donate_argnums=\(0,\)"),
+        Site("serving_decode", "src/repro/distributed/serving.py", (2,),
+             _serving_site, r"donate_argnums=\(2,\)"),
+    ]
+
+
+def run(root: Optional[Path] = None) -> list:
+    findings = []
+    for site in sites():
+        findings.extend(check_site(site, root))
+    return findings

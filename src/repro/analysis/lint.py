@@ -1,0 +1,445 @@
+"""Repo-specific AST lint (analysis layer 2, DESIGN.md §7).
+
+A small visitor framework: every rule is a :class:`Rule` subclass scoped
+to a set of path prefixes; the driver parses each python file (and each
+fenced ``python`` block in README.md / DESIGN.md) once into a
+:class:`FileCtx` and dispatches it to the rules that claim it.  Rules:
+
+* ``literal-prng-key`` — no literal ``jax.random.PRNGKey(<const>)`` (or
+  ``jax.random.key``) in library code under ``src/``; tests/examples are
+  exempt by scope.  Sanctioned escape hatch for shape-only uses: a
+  ``# analysis: shape-only`` comment on the call line or the line above.
+* ``spec-strings`` — every literal component-spec string (spec-valued
+  keyword arguments, dataclass field defaults, ``axes={...}`` sweep dicts,
+  ``resolve``/``make_env``/``Spec.parse`` call sites) must ``Spec.parse``
+  and name a registered component whose factory accepts the given kwargs.
+  Covers README/DESIGN code fences, so doc rot fails CI.
+* ``pallas-location`` — ``pallas_call`` only under ``repro/kernels/``.
+* ``numpy-traced`` — no host ``numpy`` calls inside nested functions of
+  the hot modules (those closures are traced; ``np.*`` on a tracer either
+  crashes or silently constant-folds).  Escape hatch:
+  ``# analysis: host-side``.
+* ``tracked-smoke-file`` — no ``benchmarks/*_smoke.json`` committed to
+  git (smoke outputs are per-run CI artifacts, not baselines).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+import subprocess
+from pathlib import Path
+from typing import Iterable, Optional
+
+from repro.analysis.findings import Finding
+
+# keyword/field name -> registry namespaces it may resolve in
+SPEC_KWARGS = {
+    "attack": ("attack", "fed_attack"),
+    "aggregator": ("aggregator", "fed_aggregator"),
+    "agreement": ("agreement",),
+    "estimator": ("estimator",),
+    "optimizer": ("optimizer",),
+    "topology": ("topology",),
+    "policy": ("policy",),
+    "env": ("env",),
+    "algo": ("algo",),
+}
+
+# call name -> namespace of its literal first spec argument
+SPEC_CALLS = {
+    "make_env": "env",
+    "resolve_topology": "topology",
+}
+
+
+@dataclasses.dataclass
+class LintConfig:
+    root: Path
+    lib_prefixes: tuple = ("src/",)
+    spec_prefixes: tuple = ("src/", "examples/", "benchmarks/")
+    doc_files: tuple = ("README.md", "DESIGN.md")
+    kernel_prefix: str = "src/repro/kernels/"
+    hot_prefixes: tuple = ("src/repro/core/", "src/repro/rl/",
+                           "src/repro/distributed/")
+    # the analyzer's own rule tables are spec-shaped data, not spec sites
+    spec_exclude: tuple = ("src/repro/analysis/",)
+    smoke_patterns: tuple = ("benchmarks/*_smoke.json", "*_smoke.json")
+
+
+@dataclasses.dataclass
+class FileCtx:
+    rel: str                 # repo-relative posix path ("README.md#3" for
+    tree: ast.AST            # the 3rd code fence)
+    lines: list              # raw source lines (1-indexed via lineno-1)
+    line_offset: int = 0     # fence offset into the containing document
+    is_doc_fence: bool = False
+
+    def line(self, node) -> int:
+        return node.lineno + self.line_offset
+
+    def has_hatch(self, node, tag: str) -> bool:
+        marker = f"# analysis: {tag}"
+        for ln in (node.lineno - 1, node.lineno - 2):
+            if 0 <= ln < len(self.lines) and marker in self.lines[ln]:
+                return True
+        return False
+
+
+class Rule:
+    name = "rule"
+
+    def wants(self, ctx: FileCtx, cfg: LintConfig) -> bool:
+        raise NotImplementedError
+
+    def visit(self, ctx: FileCtx, cfg: LintConfig) -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: FileCtx, node, message: str) -> Finding:
+        rel = ctx.rel.split("#")[0]
+        return Finding("lint", self.name, rel, ctx.line(node), message)
+
+
+def _starts_with(rel: str, prefixes) -> bool:
+    return any(rel.startswith(p) for p in prefixes)
+
+
+# ---------------------------------------------------------------------------
+# literal-prng-key
+# ---------------------------------------------------------------------------
+
+
+def _attr_chain(node) -> list:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return parts[::-1]
+
+
+def _is_prng_ctor(func) -> bool:
+    chain = _attr_chain(func)
+    if not chain:
+        return False
+    if chain[-1] == "PRNGKey":
+        return True
+    return chain[-1] == "key" and "random" in chain[:-1]
+
+
+class LiteralPRNGKey(Rule):
+    name = "literal-prng-key"
+
+    def wants(self, ctx, cfg):
+        return not ctx.is_doc_fence and _starts_with(ctx.rel,
+                                                     cfg.lib_prefixes)
+
+    def visit(self, ctx, cfg):
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and _is_prng_ctor(node.func) and node.args):
+                continue
+            if not isinstance(node.args[0], ast.Constant):
+                continue
+            if ctx.has_hatch(node, "shape-only"):
+                continue
+            yield self.finding(
+                ctx, node,
+                "literal PRNG key in library code — thread an explicit "
+                "key (engine.seed_keys / caller-provided key=), or mark a "
+                "shape-only use with '# analysis: shape-only'")
+
+
+# ---------------------------------------------------------------------------
+# spec-strings
+# ---------------------------------------------------------------------------
+
+
+def _validate_spec(text: str, namespaces) -> Optional[str]:
+    """Parse + resolve a spec string; returns an error message or None."""
+    from repro.core.registry import REGISTRY, Spec, SpecError
+    try:
+        spec = Spec.parse(text)
+    except SpecError as e:
+        return str(e)
+    if namespaces is None:          # parse-only site (Spec.parse/Spec.of)
+        return None
+    import inspect
+    errors = []
+    for ns in namespaces:
+        try:
+            factory = REGISTRY._factory(ns, spec.name)
+        except KeyError:
+            errors.append(f"not registered in {ns!r}")
+            continue
+        params = inspect.signature(factory).parameters
+        var_kw = any(p.kind is inspect.Parameter.VAR_KEYWORD
+                     for p in params.values())
+        bad = [k for k, _ in spec.kwargs if not var_kw and k not in params]
+        if bad:
+            errors.append(f"{ns}/{spec.name} does not accept kwarg(s) "
+                          f"{bad}")
+            continue
+        for k, v in spec.kwargs:
+            if isinstance(v, Spec):
+                err = _validate_spec(v.canonical(), (ns,))
+                if err:
+                    errors.append(err)
+                    break
+        else:
+            return None
+        continue
+    return "; ".join(errors) or None
+
+
+def _literal_specs(value) -> list:
+    """(text, node) pairs for a literal spec value: a string constant or a
+    tuple/list of them (sweep axes)."""
+    out = []
+    if isinstance(value, ast.Constant) and isinstance(value.value, str):
+        out.append((value.value, value))
+    elif isinstance(value, (ast.Tuple, ast.List)):
+        for el in value.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                out.append((el.value, el))
+    return out
+
+
+class SpecStrings(Rule):
+    name = "spec-strings"
+
+    def wants(self, ctx, cfg):
+        if _starts_with(ctx.rel, cfg.spec_exclude):
+            return False
+        return ctx.is_doc_fence or _starts_with(ctx.rel, cfg.spec_prefixes)
+
+    def _sites(self, ctx):
+        """(text, node, namespaces) for every literal spec site.  A
+        ``# analysis: not-a-spec`` comment on (or above) a dict or call
+        exempts spec-shaped data that is not a component spec."""
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.Call, ast.Dict, ast.AnnAssign)) \
+                    and ctx.has_hatch(node, "not-a-spec"):
+                continue
+            if isinstance(node, ast.Call):
+                chain = _attr_chain(node.func)
+                tail = chain[-1] if chain else None
+                for kw in node.keywords:
+                    if kw.arg in SPEC_KWARGS:
+                        for text, n in _literal_specs(kw.value):
+                            yield text, n, SPEC_KWARGS[kw.arg]
+                if tail == "resolve" and len(node.args) >= 2 \
+                        and isinstance(node.args[0], ast.Constant) \
+                        and isinstance(node.args[0].value, str):
+                    for text, n in _literal_specs(node.args[1]):
+                        yield text, n, (node.args[0].value,)
+                elif tail in SPEC_CALLS and node.args:
+                    for text, n in _literal_specs(node.args[0]):
+                        yield text, n, (SPEC_CALLS[tail],)
+                elif tail in ("parse", "of") and len(chain) >= 2 \
+                        and chain[-2] == "Spec" and node.args:
+                    for text, n in _literal_specs(node.args[0]):
+                        yield text, n, None
+            elif isinstance(node, ast.Dict):
+                for k, v in zip(node.keys, node.values):
+                    if isinstance(k, ast.Constant) \
+                            and k.value in SPEC_KWARGS:
+                        for text, n in _literal_specs(v):
+                            yield text, n, SPEC_KWARGS[k.value]
+            elif isinstance(node, ast.AnnAssign) \
+                    and isinstance(node.target, ast.Name) \
+                    and node.target.id in SPEC_KWARGS \
+                    and node.value is not None:
+                for text, n in _literal_specs(node.value):
+                    yield text, n, SPEC_KWARGS[node.target.id]
+
+    def visit(self, ctx, cfg):
+        seen = set()
+        for text, node, namespaces in self._sites(ctx):
+            key = (text, ctx.line(node))
+            if key in seen:
+                continue
+            seen.add(key)
+            err = _validate_spec(text, namespaces)
+            if err:
+                yield self.finding(
+                    ctx, node, f"spec string {text!r} does not resolve: "
+                               f"{err}")
+
+
+# ---------------------------------------------------------------------------
+# pallas-location
+# ---------------------------------------------------------------------------
+
+
+class PallasLocation(Rule):
+    name = "pallas-location"
+
+    def wants(self, ctx, cfg):
+        return (not ctx.is_doc_fence
+                and _starts_with(ctx.rel, cfg.spec_prefixes)
+                and not ctx.rel.startswith(cfg.kernel_prefix))
+
+    def visit(self, ctx, cfg):
+        for node in ast.walk(ctx.tree):
+            chain = _attr_chain(node.func) if isinstance(node, ast.Call) \
+                else _attr_chain(node) if isinstance(node, ast.Attribute) \
+                else []
+            if chain and chain[-1] == "pallas_call":
+                yield self.finding(
+                    ctx, node,
+                    "pallas_call outside repro/kernels/ — kernels live "
+                    "behind the dispatch layer (DESIGN.md §6)")
+                return      # one per file is enough
+
+
+# ---------------------------------------------------------------------------
+# numpy-traced
+# ---------------------------------------------------------------------------
+
+
+class NumpyInTracedScope(Rule):
+    name = "numpy-traced"
+
+    def wants(self, ctx, cfg):
+        return not ctx.is_doc_fence and _starts_with(ctx.rel,
+                                                     cfg.hot_prefixes)
+
+    @staticmethod
+    def _numpy_aliases(tree) -> set:
+        aliases = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "numpy":
+                        aliases.add(a.asname or "numpy")
+        return aliases
+
+    def visit(self, ctx, cfg):
+        aliases = self._numpy_aliases(ctx.tree)
+        if not aliases:
+            return
+        # nested function bodies are the traced closures
+        for outer in ast.walk(ctx.tree):
+            if not isinstance(outer, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                continue
+            for inner in ast.walk(outer):
+                if inner is outer or not isinstance(
+                        inner, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                    continue
+                for node in ast.walk(inner):
+                    if isinstance(node, ast.Call):
+                        chain = _attr_chain(node.func)
+                        if len(chain) >= 2 and chain[0] in aliases \
+                                and not ctx.has_hatch(node, "host-side"):
+                            yield self.finding(
+                                ctx, node,
+                                f"host numpy call "
+                                f"({'.'.join(chain)}) inside a nested "
+                                f"(traced) function of a hot module — "
+                                f"use jnp, or mark trace-time constant "
+                                f"work with '# analysis: host-side'")
+
+
+# ---------------------------------------------------------------------------
+# tracked-smoke-file (repo-level, no AST)
+# ---------------------------------------------------------------------------
+
+
+def check_tracked_smoke(cfg: LintConfig) -> list:
+    try:
+        out = subprocess.run(
+            ["git", "ls-files", "--", *cfg.smoke_patterns],
+            cwd=cfg.root, capture_output=True, text=True, timeout=60)
+    except (OSError, subprocess.TimeoutExpired):
+        return []
+    if out.returncode != 0:
+        return []
+    return [
+        Finding("lint", "tracked-smoke-file", p, 0,
+                "smoke benchmark output is tracked by git — smoke runs "
+                "are per-run CI artifacts, only full BENCH_*.json "
+                "baselines are committed")
+        for p in out.stdout.split() if p
+    ]
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+RULES = (LiteralPRNGKey(), SpecStrings(), PallasLocation(),
+         NumpyInTracedScope())
+
+_FENCE_RE = re.compile(r"^```(\w*)\s*$")
+
+
+def _doc_fences(rel: str, text: str):
+    """Yield (rel#i, fence_source, line_offset) for ```python fences."""
+    lines = text.splitlines()
+    i, n, count = 0, len(lines), 0
+    while i < n:
+        m = _FENCE_RE.match(lines[i])
+        if m and m.group(1) == "python":
+            start = i + 1
+            j = start
+            while j < n and not lines[j].startswith("```"):
+                j += 1
+            count += 1
+            yield f"{rel}#{count}", "\n".join(lines[start:j]), start
+            i = j + 1
+        else:
+            i += 1
+
+
+def _contexts(cfg: LintConfig):
+    prefixes = set(cfg.lib_prefixes) | set(cfg.spec_prefixes) \
+        | set(cfg.hot_prefixes)
+    seen = set()
+    for prefix in sorted(prefixes):
+        base = cfg.root / prefix
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            rel = path.relative_to(cfg.root).as_posix()
+            if rel in seen:
+                continue
+            seen.add(rel)
+            text = path.read_text()
+            try:
+                tree = ast.parse(text)
+            except SyntaxError:
+                continue        # not this tool's job
+            yield FileCtx(rel, tree, text.splitlines())
+    for doc in cfg.doc_files:
+        path = cfg.root / doc
+        if not path.is_file():
+            continue
+        text = path.read_text()
+        for rel, src, offset in _doc_fences(doc, text):
+            try:
+                tree = ast.parse(src)
+            except SyntaxError:
+                continue        # illustrative snippet, not runnable code
+            yield FileCtx(rel, tree, src.splitlines(), line_offset=offset,
+                          is_doc_fence=True)
+
+
+def repo_root() -> Path:
+    return Path(__file__).resolve().parents[3]
+
+
+def run(root: Optional[Path] = None,
+        config: Optional[LintConfig] = None) -> list:
+    cfg = config or LintConfig(root=Path(root) if root else repo_root())
+    findings = []
+    for ctx in _contexts(cfg):
+        for rule in RULES:
+            if rule.wants(ctx, cfg):
+                findings.extend(rule.visit(ctx, cfg))
+    findings.extend(check_tracked_smoke(cfg))
+    return findings

@@ -1,0 +1,247 @@
+"""Recompile audit: one compile per (algo, static signature), never more.
+
+Two layers:
+
+* :func:`audit_static` — pure config hygiene per registered algorithm:
+  the default config must construct, its :func:`engine.static_key` must
+  hash (unhashable field ⇒ silent cache miss every call ⇒ retrace), two
+  equal configs must produce equal static keys (an ``object()`` default
+  would make every instance its own cache key), the seed must not reach
+  the static key, and — the lane-batching contract — changing a
+  ``traced_fields`` scalar must leave :func:`engine.lane_split`'s static
+  representative (and its hash) unchanged.
+
+* :func:`audit_compiles` — dynamic compile counting over a real
+  lane-batched grid.  A grid with two static attack shapes × a traced
+  eta sweep must compile exactly ``len(lane groups)`` programs
+  (``engine.compile_count`` delta), and re-running the *same* static
+  grid with different traced values and different seeds must add zero
+  cache entries and emit zero ``jax.log_compiles`` records — sweeping a
+  traced scalar or a seed must never reach the compile cache key.
+
+Used by ``python -m repro.analysis`` and ``tests/test_analysis_retrace.py``;
+the CLI entry is the CI compile-count gate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import logging
+import re
+from typing import Optional
+
+import jax
+
+from repro.analysis.findings import Finding
+
+_COMPILING_RE = re.compile(r"^Compiling ([\w<>-]+) ")
+
+
+class CompileLog:
+    """Context manager capturing XLA "Compiling <name> ..." records (via
+    ``jax.log_compiles``) on the jax logger tree."""
+
+    def __init__(self):
+        self.messages: list = []
+
+    def compiles(self) -> list:
+        """Names of compiled programs, in order."""
+        out = []
+        for m in self.messages:
+            match = _COMPILING_RE.match(m)
+            if match:
+                out.append(match.group(1))
+        return out
+
+    def __enter__(self):
+        outer = self
+
+        class _Handler(logging.Handler):
+            def emit(self, record):
+                outer.messages.append(record.getMessage())
+
+        self._handler = _Handler(level=logging.DEBUG)
+        self._logger = logging.getLogger("jax")
+        self._logger.addHandler(self._handler)
+        self._log_compiles = jax.log_compiles()
+        self._log_compiles.__enter__()
+        return self
+
+    def __exit__(self, *exc):
+        self._log_compiles.__exit__(*exc)
+        self._logger.removeHandler(self._handler)
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Static audit
+# ---------------------------------------------------------------------------
+
+
+def _anchor(cls) -> tuple:
+    try:
+        path = inspect.getsourcefile(cls) or "<unknown>"
+        line = inspect.getsourcelines(cls)[1]
+    except (OSError, TypeError):
+        path, line = "<unknown>", 0
+    return path, line
+
+
+def audit_static_config(algo: str, config_cls, traced_fields) -> list:
+    """Cache-key hygiene findings for one algorithm config class."""
+    from repro.core import engine
+    path, line = _anchor(config_cls)
+    findings = []
+
+    def bad(rule, msg):
+        findings.append(Finding("retrace", rule, path, line,
+                                f"[{algo}] {msg}"))
+
+    try:
+        cfg = config_cls()
+    except Exception as e:
+        bad("default-config", f"{config_cls.__name__}() must construct "
+            f"(the analysis passes and grid defaults rely on it): {e}")
+        return findings
+    try:
+        h1 = hash(engine.static_key(cfg))
+    except TypeError as e:
+        bad("unhashable-static", f"static_key(cfg) is unhashable — every "
+            f"compiled-loop cache lookup would miss and retrace: {e}")
+        return findings
+    cfg2 = config_cls()
+    if engine.static_key(cfg) != engine.static_key(cfg2) \
+            or h1 != hash(engine.static_key(cfg2)):
+        bad("unstable-static-key",
+            "two identically-constructed configs produce different static "
+            "keys — per-instance state (e.g. an object() default) defeats "
+            "the compile cache")
+        return findings
+    if engine.static_key(dataclasses.replace(cfg, seed=cfg.seed + 17)) \
+            != engine.static_key(cfg):
+        bad("seed-in-static-key",
+            "the seed reaches static_key — every seed would compile its "
+            "own program (seeds are data, not program)")
+
+    fields = {f.name for f in dataclasses.fields(cfg)}
+    present = []
+    for name in traced_fields:
+        if hasattr(cfg, name):
+            present.append(name)
+        else:
+            bad("traced-field-missing",
+                f"traced field {name!r} is neither a dataclass field nor "
+                f"a derived property — lane_split would crash on it")
+    traced_fields = tuple(present)
+    base_static, base_names, _ = engine.lane_split(cfg, traced_fields)
+    for name in traced_fields:
+        field = name if name in fields \
+            else ("p" if name == "switch_p" and "p" in fields else None)
+        if field is None:
+            continue
+        old = getattr(cfg, field)
+        new = 0.375 if not isinstance(old, float) else old + 0.125
+        swept = dataclasses.replace(cfg, **{field: new})
+        static, names, _ = engine.lane_split(swept, traced_fields)
+        if static != base_static or hash(static) != hash(base_static) \
+                or names != base_names:
+            bad("traced-leaks-into-static",
+                f"sweeping traced field {name!r} (via {field!r}) changes "
+                f"the lane-group static representative — the sweep would "
+                f"compile one program per value instead of lane-batching")
+    return findings
+
+
+def audit_static() -> list:
+    from repro.core.registry import REGISTRY, resolve
+    findings = []
+    for algo in REGISTRY.names("algo"):
+        a = resolve("algo", algo)
+        findings.extend(
+            audit_static_config(algo, a.config_cls, a.traced_fields))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Dynamic audit
+# ---------------------------------------------------------------------------
+
+
+def _grid(etas, seeds):
+    from repro.core import engine
+    return engine.ScenarioGrid(
+        seeds=seeds, axes={"eta": tuple(etas),
+                           "attack": ("none", "sign_flip")})
+
+
+_BASE = dict(K=3, n_byz=1, N=3, B=2, hidden=(8,))
+
+
+def _expected_groups(env, grid, algo="decbyzpg", **base) -> int:
+    from repro.core import engine
+    from repro.core.registry import resolve
+    a = resolve("algo", algo)
+    fields = {f.name for f in dataclasses.fields(a.config_cls)}
+    groups = set()
+    for scn in grid.scenarios():
+        assign = {k: v for k, v in scn._asdict().items() if k in fields}
+        cfg = a.config_cls(**{**base, **assign})
+        static_cfg, names, _ = engine.lane_split(cfg, a.traced_fields)
+        groups.add((static_cfg, names))
+    return len(groups)
+
+
+def audit_compiles(T: int = 2) -> list:
+    """Run a two-group lane grid twice and assert the compile counts:
+    first run compiles exactly the lane-group count, a re-sweep with new
+    traced values and seeds compiles nothing."""
+    from repro.core import engine
+    from repro.rl.envs import make_env
+    env = make_env("cartpole(horizon=12)")
+    findings = []
+
+    def bad(rule, msg):
+        findings.append(Finding(
+            "retrace", rule,
+            inspect.getsourcefile(engine.lane_batch_loop) or "<unknown>",
+            0, msg))
+
+    grid_a = _grid((5e-3, 1e-2), seeds=(0, 1))
+    expected = _expected_groups(env, grid_a, **_BASE)
+    c0 = engine.compile_count()
+    engine.run_grid(env, grid_a, T, algo="decbyzpg", **_BASE)
+    delta = engine.compile_count() - c0
+    if delta != expected:
+        bad("compile-count",
+            f"lane-grouped grid compiled {delta} programs, expected "
+            f"{expected} (one per (algo, static_key, traced-names) "
+            f"group)")
+
+    # same static signatures and batch shape, new traced values + new
+    # seeds: nothing may compile — neither in the engine cache nor in XLA
+    # (the lane/seed counts stay fixed; row count is legitimately static)
+    grid_b = _grid((2e-2, 3e-2), seeds=(2, 3))
+    c1 = engine.compile_count()
+    with CompileLog() as log:
+        engine.run_grid(env, grid_b, T, algo="decbyzpg", **_BASE)
+    delta_b = engine.compile_count() - c1
+    if delta_b != 0:
+        bad("traced-retrace",
+            f"re-running the same static grid with new traced values and "
+            f"seeds added {delta_b} cache entries — a traced_fields value "
+            f"or the seed leaks into the compiled-loop cache key")
+    recompiled = log.compiles()
+    if recompiled:
+        bad("xla-recompile",
+            f"re-running the same static grid with new traced values and "
+            f"seeds triggered XLA compiles: {recompiled[:5]} — a traced "
+            f"operand is reaching jit as a static argument")
+    return findings
+
+
+def run(dynamic: bool = True) -> list:
+    findings = audit_static()
+    if dynamic:
+        findings.extend(audit_compiles())
+    return findings

@@ -198,7 +198,9 @@ def avg_agree(theta: jnp.ndarray, kappa: int, n_byz: int,
                 "`key` (thread one from the caller's key stream); the old "
                 "silent key=None -> PRNGKey(0) fallback made attacks "
                 "deterministic and identical across calls")
-        key = jax.random.PRNGKey(0)          # honest rounds draw nothing
+        # honest rounds never consume a key (attack is None), so the
+        # placeholder is a raw zero key, not a PRNG stream
+        key = jnp.zeros((2,), jnp.uint32)
     rows = jnp.arange(K)[:, None]
 
     def one_round(th, k):

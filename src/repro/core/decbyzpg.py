@@ -199,12 +199,14 @@ def build_decbyzpg_loop(env, cfg: DecByzPGConfig, T: int, traced=None):
 
 
 def fused_decbyzpg(env, cfg: DecByzPGConfig, T: int):
-    """Jitted fused loop, cached per static config shape; the
-    (θ, θ_prev, opt) carry buffers are donated."""
+    """Jitted fused loop, cached per static config shape; the θ_0 carry
+    buffer is donated (it aliases the final θ output — θ_prev/opt have no
+    matching output to alias, so donating them would only be dead weight;
+    the ``repro.analysis`` donation audit enforces this)."""
     key = ("decbyzpg", env.name, env.horizon, engine.static_key(cfg), T)
     return engine.compiled(key, lambda: jax.jit(
         build_decbyzpg_loop(env, cfg, T),
-        donate_argnums=engine.donate_args(0, 1, 2)))
+        donate_argnums=engine.donate_args(0)))
 
 
 def _finalize(cfg, unravel, hist) -> dict:

@@ -99,8 +99,11 @@ def static_key(cfg):
 
 
 def donate_args(*argnums):
-    """Carry-donation argnums, empty on CPU where donation is unimplemented
-    (it would only emit a "donated buffers were not usable" warning)."""
+    """Carry-donation argnums, empty on CPU by policy: donation is a
+    device-memory play, and host allocations are cheap enough that the
+    reuse is not worth coupling callers to invalidated input buffers.
+    (The ``repro.analysis`` donation audit compiles each site with its
+    donation *forced* so aliasing is still validated on CPU CI.)"""
     return argnums if jax.default_backend() != "cpu" else ()
 
 

@@ -188,7 +188,7 @@ def _value_from_node(node, src: str):
 # ---------------------------------------------------------------------------
 
 # namespace -> modules whose import registers that namespace's built-ins
-_PROVIDERS: Dict[str, Tuple[str, ...]] = {
+_PROVIDERS: Dict[str, Tuple[str, ...]] = {  # analysis: not-a-spec
     "aggregator": ("repro.core.aggregators",),
     "attack": ("repro.core.attacks",),
     "agreement": ("repro.core.agreement",),

@@ -149,16 +149,22 @@ def fed_state_shardings(cfg: ModelConfig, state_shape: FedState, mesh):
 
 def make_fed_step(cfg: ModelConfig, fed: FedConfig, mesh, *, large: bool,
                   dtype=jnp.float32, per_agent_batch: int = 8,
-                  seq_len: int = 512):
+                  seq_len: int = 512, key=None):
     """jit'd federated step with mesh shardings (used by launch + dry-run).
 
     Returns (jitted_step, state_shape, batch_shape, shardings dict).
+
+    ``key`` shapes the FedState tree (consumed only under
+    ``jax.eval_shape``): pass the caller's init key — or a
+    ``ShapeDtypeStruct`` — to make the stream explicit; ``None`` uses an
+    abstract key struct, so no literal PRNG key is baked in here.
     """
     from jax.sharding import NamedSharding
     K = n_agents(cfg, mesh)
+    if key is None:
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
     state_shape = jax.eval_shape(
-        lambda k: init_fed_state(cfg, fed, K, k, dtype),
-        jax.random.PRNGKey(0))
+        lambda k: init_fed_state(cfg, fed, K, k, dtype), key)
     state_sh = fed_state_shardings(cfg, state_shape, mesh)
     b_sh = NamedSharding(mesh, batch_spec(cfg, mesh, stacked=True))
     rep = NamedSharding(mesh, jax.sharding.PartitionSpec())

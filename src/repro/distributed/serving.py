@@ -27,12 +27,19 @@ def serve_cache_len(cfg: ModelConfig, seq_len: int) -> int:
 
 
 def make_serve_fns(cfg: ModelConfig, mesh, batch: int, seq_len: int,
-                   dtype=jnp.float32):
+                   dtype=jnp.float32, *, key=None):
     """Returns (prefill_jit, decode_jit, specs) with mesh shardings.
 
     prefill(params, tokens[, prefix_embeds]) -> (logits, cache)
     decode(params, token, cache) -> (logits, cache)
+
+    ``key`` shapes the parameter tree (it is only ever consumed under
+    ``jax.eval_shape``): pass the caller's init key — or a
+    ``ShapeDtypeStruct`` — to make the stream explicit; ``None`` uses an
+    abstract key struct, so no literal PRNG key is baked in here.
     """
+    if key is None:
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
     axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
     n_batch_shards = 1
     for a in axes:
@@ -48,7 +55,7 @@ def make_serve_fns(cfg: ModelConfig, mesh, batch: int, seq_len: int,
         lambda: init_cache(cfg, batch, W, dtype))
     c_sh = cache_shardings(cfg, cache_shape, mesh)
     params_shape = jax.eval_shape(lambda k: init_params(cfg, k, dtype),
-                                  jax.random.PRNGKey(0))
+                                  key)
     psh = p_sh(params_shape)
 
     def _prefill(params, tokens, prefix_embeds=None):

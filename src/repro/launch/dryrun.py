@@ -47,13 +47,14 @@ def build_lowered(arch: str, shape_name: str, mesh, fed: FedConfig,
         per_agent = max(shape.global_batch // K, 1)
         step, state_shape, batch, (state_sh, batch_sh, _) = make_fed_step(
             cfg, fed, mesh, large=True, dtype=dtype,
-            per_agent_batch=per_agent, seq_len=shape.seq_len)
+            per_agent_batch=per_agent, seq_len=shape.seq_len,
+            key=key_struct)
         mask = jax.ShapeDtypeStruct((K,), jnp.bool_)
         return step.lower(state_shape, batch, mask, key_struct), cfg, shape
 
     B = shape.global_batch
     prefill_jit, decode_jit, specs = make_serve_fns(
-        cfg, mesh, B, shape.seq_len, dtype=dtype)
+        cfg, mesh, B, shape.seq_len, dtype=dtype, key=key_struct)
     params_shape = specs["params_shape"]
     if shape.mode == "prefill":
         S_text = shape.seq_len - cfg.n_prefix_embeds

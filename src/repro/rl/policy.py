@@ -40,9 +40,12 @@ def policy_logits(params, obs, logits="tanh"):
 
 def policy_unraveler(policy: Policy):
     """(unravel_fn, d) for the flat policy vector — from a template init
-    (shapes only, seed-free), shared by the fused training loops."""
+    whose values are discarded (``ravel_pytree`` keeps only the tree
+    structure and leaf shapes), so the fixed key never reaches a sampled
+    stream — the sanctioned shape-only exemption (DESIGN.md §7)."""
     from jax.flatten_util import ravel_pytree
-    vec, unravel = ravel_pytree(policy.init(jax.random.PRNGKey(0)))
+    vec, unravel = ravel_pytree(
+        policy.init(jax.random.PRNGKey(0)))     # analysis: shape-only
     return unravel, vec.shape[0]
 
 
@@ -74,10 +77,12 @@ def mlp_sizes(env, hidden) -> tuple:
 
 def mlp_unraveler(env, hidden):
     """(unravel_fn, d) for the flat policy vector — derived from a template
-    init (shapes only, seed-free), shared by the fused training loops."""
+    init whose values are discarded (shape-only, see
+    :func:`policy_unraveler`)."""
     from jax.flatten_util import ravel_pytree
-    vec, unravel = ravel_pytree(init_mlp(jax.random.PRNGKey(0),
-                                         mlp_sizes(env, hidden)))
+    vec, unravel = ravel_pytree(
+        init_mlp(jax.random.PRNGKey(0),         # analysis: shape-only
+                 mlp_sizes(env, hidden)))
     return unravel, vec.shape[0]
 
 

@@ -1,0 +1,68 @@
+"""donation pass: forced-donation aliasing audit fires on undonatable
+fixtures (a donated buffer with no same-shaped output) and on registry
+drift, and every real site is clean."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.donation import Site, check_site, run, sites
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+def test_undonatable_carry_flagged():
+    # output is a scalar: none of the donated 256 input bytes can alias
+    site = Site("fixture", "does/not/exist.py", (0,),
+                lambda: (lambda x: x.sum(), (jnp.zeros((8, 8)),)),
+                r"unused")
+    findings = check_site(site)
+    assert _rules(findings) & {"unusable-donation", "partial-alias"}
+    for f in findings:
+        assert "[fixture]" in f.message
+
+
+def test_partially_aliasable_carry_flagged():
+    # only the second tuple element comes back out; the first is dead
+    # weight, so aliased bytes < donated bytes
+    def fn(pair):
+        a, b = pair
+        return a.sum(), b * 2.0
+
+    site = Site("fixture", "does/not/exist.py", (0,),
+                lambda: (fn, ((jnp.zeros((64,)), jnp.zeros((64,))),)),
+                r"unused")
+    assert "partial-alias" in _rules(check_site(site))
+
+
+def test_fully_aliasable_carry_clean():
+    site = Site("fixture", "does/not/exist.py", (0,),
+                lambda: (lambda x: x * 2.0 + 1.0, (jnp.zeros((32, 32)),)),
+                r"unused")
+    assert check_site(site) == []
+
+
+def test_site_drift_flagged():
+    def must_not_build():
+        raise AssertionError("drifted site must not be compiled")
+
+    site = Site("fixture", "src/repro/core/engine.py", (0,),
+                must_not_build, r"THIS_PATTERN_IS_NOT_IN_ENGINE_PY")
+    findings = check_site(site)
+    assert _rules(findings) == {"site-drift"}
+
+
+def test_site_registry_matches_sources():
+    # the drift patterns alone (no compiles): every registered site's
+    # donate_argnums still appear in its source file
+    import re
+    from repro.analysis.lint import repo_root
+
+    for site in sites():
+        text = (repo_root() / site.path).read_text()
+        assert re.search(site.source_pattern, text), site.name
+
+
+def test_real_sites_clean():
+    assert run() == []

@@ -1,0 +1,147 @@
+"""keycheck pass: each rule fires on a deliberately-broken jaxpr fixture
+(with file/line context pointing into this file) and stays silent on the
+sound idioms; the real program inventory is clean."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.keycheck import check_jaxpr, run
+
+KEY = jax.ShapeDtypeStruct((2,), jnp.uint32)
+_THIS = "test_analysis_keycheck.py"
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+def _assert_context(findings):
+    """Every fixture finding must carry a real location in this file."""
+    for f in findings:
+        assert f.path.endswith(_THIS), f.format()
+        assert f.line > 0, f.format()
+
+
+# -- broken fixtures --------------------------------------------------------
+
+
+def test_reused_key_flagged():
+    def bad(k):
+        return jax.random.normal(k, (2,)) + jax.random.uniform(k, (2,))
+
+    findings = check_jaxpr(jax.make_jaxpr(bad)(KEY), "fixture")
+    assert "key-reuse" in _rules(findings)
+    _assert_context(findings)
+
+
+def test_sample_then_derive_flagged():
+    def bad(k):
+        x = jax.random.normal(k, ())
+        k1, _ = jax.random.split(k)
+        return x + jax.random.normal(k1, ())
+
+    findings = check_jaxpr(jax.make_jaxpr(bad)(KEY), "fixture")
+    assert "sample-then-derive" in _rules(findings)
+    _assert_context(findings)
+
+
+def test_double_split_flagged():
+    def bad(k):
+        a = jax.random.split(k, 2)
+        b = jax.random.split(k, 2)  # identical child streams
+        return jax.random.normal(a[0], ()) + jax.random.normal(b[1], ())
+
+    findings = check_jaxpr(jax.make_jaxpr(bad)(KEY), "fixture")
+    assert "double-split" in _rules(findings)
+    _assert_context(findings)
+
+
+def test_scan_invariant_sample_flagged():
+    def bad(k):
+        def body(c, _):
+            return c + jax.random.normal(k, ()), None
+
+        return jax.lax.scan(body, 0.0, jnp.arange(3))[0]
+
+    findings = check_jaxpr(jax.make_jaxpr(bad)(KEY), "fixture")
+    assert "scan-invariant-sample" in _rules(findings)
+    _assert_context(findings)
+
+
+def test_missing_fanout_flagged():
+    def bad(k):
+        return jax.random.normal(k, (4,))  # no 4-wide split of the key
+
+    findings = check_jaxpr(jax.make_jaxpr(bad)(KEY), "fixture",
+                           expect_fanout=4)
+    assert "per-agent-fanout" in _rules(findings)
+
+
+# -- sound idioms stay clean ------------------------------------------------
+
+
+def test_split_subkeys_clean():
+    def good(k):
+        k1, k2 = jax.random.split(k)
+        return jax.random.normal(k1, ()) + jax.random.normal(k2, ())
+
+    assert check_jaxpr(jax.make_jaxpr(good)(KEY), "fixture") == []
+
+
+def test_cond_branches_are_exclusive():
+    def good(pred, k):
+        return jax.lax.cond(pred,
+                            lambda kk: jax.random.normal(kk, ()),
+                            lambda kk: jax.random.normal(kk, ()) + 1.0,
+                            k)
+
+    closed = jax.make_jaxpr(good)(jax.ShapeDtypeStruct((), jnp.bool_), KEY)
+    assert check_jaxpr(closed, "fixture") == []
+
+
+def test_fold_in_loop_clean():
+    def good(k):
+        def body(c, t):
+            kk = jax.random.fold_in(k, t)
+            return c + jax.random.normal(kk, ()), None
+
+        return jax.lax.scan(body, 0.0, jnp.arange(3))[0]
+
+    assert check_jaxpr(jax.make_jaxpr(good)(KEY), "fixture") == []
+
+
+def test_scan_xs_keys_clean():
+    def good(keys):
+        def body(c, kk):
+            return c + jax.random.normal(kk, ()), None
+
+        return jax.lax.scan(body, 0.0, keys)[0]
+
+    keys = jax.ShapeDtypeStruct((3, 2), jnp.uint32)
+    assert check_jaxpr(jax.make_jaxpr(good)(keys), "fixture") == []
+
+
+def test_vmapped_split_fanout_counts():
+    def good(k):
+        ks = jax.random.split(k, 4)
+        return jax.vmap(lambda kk: jax.random.normal(kk, ()))(ks)
+
+    findings = check_jaxpr(jax.make_jaxpr(good)(KEY), "fixture",
+                           expect_fanout=4)
+    assert findings == []
+
+
+# -- the real builders ------------------------------------------------------
+
+
+@pytest.mark.parametrize("program", [
+    "decbyzpg_loop", "byzpg_loop", "lane_batch_loop",
+])
+def test_rl_programs_clean(program):
+    assert run(selected=[program]) == []
+
+
+@pytest.mark.slow
+def test_all_programs_clean():
+    assert run() == []

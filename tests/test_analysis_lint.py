@@ -1,0 +1,229 @@
+"""lint pass: every rule fires on a seeded tmp-tree violation with
+file/line context, escape hatches suppress it, doc fences are checked,
+the tracked-smoke rule sees git, and the real repo plus the CLI wiring
+are clean."""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from repro.analysis.findings import Finding
+from repro.analysis.lint import (LintConfig, check_tracked_smoke, run)
+
+
+def _write(root: Path, rel: str, body: str) -> None:
+    path = root / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(body))
+
+
+def _lint(root: Path):
+    return run(config=LintConfig(root=root))
+
+
+def _one(findings, rule):
+    hits = [f for f in findings if f.rule == rule]
+    assert hits, f"no {rule} finding in {[f.format() for f in findings]}"
+    return hits[0]
+
+
+# -- literal-prng-key -------------------------------------------------------
+
+
+def test_literal_prng_key_flagged(tmp_path):
+    _write(tmp_path, "src/repro/foo.py", """\
+        import jax
+
+        def f():
+            return jax.random.PRNGKey(0)
+        """)
+    f = _one(_lint(tmp_path), "literal-prng-key")
+    assert f.path == "src/repro/foo.py" and f.line == 4
+
+
+def test_shape_only_hatch_suppresses(tmp_path):
+    _write(tmp_path, "src/repro/foo.py", """\
+        import jax
+
+        def f():
+            # analysis: shape-only
+            return jax.random.PRNGKey(0)
+        """)
+    assert _lint(tmp_path) == []
+
+
+def test_tests_are_exempt(tmp_path):
+    _write(tmp_path, "tests/test_foo.py", """\
+        import jax
+        KEY = jax.random.PRNGKey(0)
+        """)
+    assert _lint(tmp_path) == []
+
+
+# -- spec-strings -----------------------------------------------------------
+
+
+def test_unparseable_spec_flagged(tmp_path):
+    _write(tmp_path, "src/repro/foo.py", """\
+        from repro.core.registry import resolve
+
+        def f():
+            return resolve("aggregator", "rfa(((")
+        """)
+    f = _one(_lint(tmp_path), "spec-strings")
+    assert f.path == "src/repro/foo.py" and f.line == 4
+    assert "rfa(((" in f.message
+
+
+def test_unregistered_spec_flagged(tmp_path):
+    _write(tmp_path, "src/repro/foo.py",
+           'CFG = dict(aggregator="definitely_not_registered")\n')
+    assert _one(_lint(tmp_path), "spec-strings").line == 1
+
+
+def test_bad_kwarg_spec_flagged(tmp_path):
+    _write(tmp_path, "examples/demo.py",
+           'CFG = dict(attack="large_noise(bogus_kwarg=1)")\n')
+    f = _one(_lint(tmp_path), "spec-strings")
+    assert "bogus_kwarg" in f.message
+
+
+def test_valid_spec_clean(tmp_path):
+    _write(tmp_path, "src/repro/foo.py",
+           'CFG = dict(attack="large_noise(sigma=10)", aggregator="rfa")\n')
+    assert _lint(tmp_path) == []
+
+
+def test_not_a_spec_hatch_suppresses(tmp_path):
+    _write(tmp_path, "src/repro/foo.py", """\
+        # analysis: not-a-spec
+        LABELS = dict(attack="our strongest attack (sec 5)")
+        """)
+    assert _lint(tmp_path) == []
+
+
+def test_doc_fence_spec_rot_flagged(tmp_path):
+    _write(tmp_path, "README.md", """\
+        # Demo
+
+        ```python
+        from repro.core.registry import resolve
+        agg = resolve("aggregator", "renamed_away")
+        ```
+        """)
+    f = _one(_lint(tmp_path), "spec-strings")
+    # line is offset into README.md, not into the fence
+    assert f.path == "README.md" and f.line == 5
+
+
+# -- pallas-location --------------------------------------------------------
+
+
+def test_pallas_outside_kernels_flagged(tmp_path):
+    _write(tmp_path, "src/repro/core/foo.py", """\
+        from jax.experimental import pallas as pl
+
+        def f(x):
+            return pl.pallas_call(lambda r: r, out_shape=x)(x)
+        """)
+    assert _one(_lint(tmp_path), "pallas-location").line == 4
+
+
+def test_pallas_inside_kernels_clean(tmp_path):
+    _write(tmp_path, "src/repro/kernels/foo.py", """\
+        from jax.experimental import pallas as pl
+
+        def f(x):
+            return pl.pallas_call(lambda r: r, out_shape=x)(x)
+        """)
+    assert _lint(tmp_path) == []
+
+
+# -- numpy-traced -----------------------------------------------------------
+
+
+def test_numpy_in_traced_scope_flagged(tmp_path):
+    _write(tmp_path, "src/repro/core/foo.py", """\
+        import numpy as np
+
+        def build(cfg):
+            def step(carry, x):
+                return np.sum(carry), None
+            return step
+        """)
+    f = _one(_lint(tmp_path), "numpy-traced")
+    assert f.line == 5 and "np.sum" in f.message
+
+
+def test_host_side_hatch_suppresses(tmp_path):
+    _write(tmp_path, "src/repro/core/foo.py", """\
+        import numpy as np
+
+        def build(cfg):
+            def step(carry, x):
+                # analysis: host-side
+                return np.sum(carry), None
+            return step
+        """)
+    assert _lint(tmp_path) == []
+
+
+def test_module_level_numpy_clean(tmp_path):
+    _write(tmp_path, "src/repro/core/foo.py", """\
+        import numpy as np
+        TABLE = np.arange(8)
+        """)
+    assert _lint(tmp_path) == []
+
+
+# -- tracked-smoke-file -----------------------------------------------------
+
+
+def test_tracked_smoke_file_flagged(tmp_path):
+    def git(*argv):
+        subprocess.run(["git", *argv], cwd=tmp_path, check=True,
+                       capture_output=True)
+
+    git("init", "-q")
+    _write(tmp_path, "benchmarks/bench_smoke.json", "{}\n")
+    git("add", "benchmarks/bench_smoke.json")
+    findings = check_tracked_smoke(LintConfig(root=tmp_path))
+    assert [f.rule for f in findings] == ["tracked-smoke-file"]
+    assert findings[0].path == "benchmarks/bench_smoke.json"
+
+
+def test_untracked_smoke_file_clean(tmp_path):
+    subprocess.run(["git", "init", "-q"], cwd=tmp_path, check=True,
+                   capture_output=True)
+    _write(tmp_path, "benchmarks/bench_smoke.json", "{}\n")
+    assert check_tracked_smoke(LintConfig(root=tmp_path)) == []
+
+
+# -- the real repo + CLI wiring ---------------------------------------------
+
+
+def test_repo_is_clean():
+    assert run() == []
+
+
+def test_cli_exit_codes(monkeypatch, capsys):
+    from repro.analysis import __main__ as cli
+
+    monkeypatch.setitem(
+        cli.PASSES, "lint",
+        lambda: [Finding("lint", "fixture", "src/x.py", 3, "seeded")])
+    assert cli.main(["--passes", "lint"]) == 1
+    out = capsys.readouterr().out
+    assert "src/x.py:3: [lint/fixture] seeded" in out
+
+    monkeypatch.setitem(cli.PASSES, "lint", lambda: [])
+    assert cli.main(["--passes", "lint"]) == 0
+
+
+def test_cli_rejects_unknown_pass():
+    import pytest
+
+    from repro.analysis import __main__ as cli
+    with pytest.raises(SystemExit):
+        cli.main(["--passes", "nope"])

@@ -1,0 +1,45 @@
+"""memcheck pass: the contract evaluator flags bound violations and
+unavailable meshes on fixture contracts, and the real contract table is
+clean on the forced-4-device subprocess."""
+
+import pytest
+
+from repro.analysis.memcheck import (MemContract, _check_contracts,
+                                     contracts, run)
+
+
+def _rules(dicts):
+    return {d["rule"] for d in dicts}
+
+
+def test_violated_argument_bound_flagged():
+    # an impossible bound: no program's arguments fit in negative bytes
+    bad = MemContract(aggregator="rfa", K=8, devices=1,
+                      arg_slack=-10**15, temp_factor=10**6)
+    found = _check_contracts([bad])
+    assert _rules(found) == {"argument-footprint"}
+    assert "rfa(K=8)@1dev" in found[0]["message"]
+
+
+def test_violated_temp_bound_flagged():
+    bad = MemContract(aggregator="krum", K=8, devices=1, temp_factor=0)
+    found = _check_contracts([bad])
+    assert "temp-footprint" in _rules(found)
+
+
+def test_unavailable_mesh_flagged():
+    bad = MemContract(aggregator="rfa", K=8, devices=4096)
+    found = _check_contracts([bad])
+    assert _rules(found) == {"mesh-unavailable"}
+
+
+def test_contract_table_shape():
+    table = contracts()
+    assert {c.devices for c in table} == {2, 4}
+    assert {c.aggregator for c in table} == {"krum", "rfa"}
+
+
+@pytest.mark.slow
+def test_real_contracts_clean():
+    # full path: forced-device subprocess + JSON findings protocol
+    assert run() == []

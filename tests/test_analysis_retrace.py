@@ -1,0 +1,89 @@
+"""retrace pass: cache-key hygiene rules fire on broken config fixtures
+(unhashable static field, per-instance default, missing traced field,
+lane-split leak), and the real registry + the dynamic compile-count gate
+are clean."""
+
+import dataclasses
+
+import pytest
+
+from repro.analysis.retrace import (audit_compiles, audit_static,
+                                    audit_static_config)
+from repro.core import engine
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+@dataclasses.dataclass(frozen=True)
+class _GoodCfg:
+    seed: int = 0
+    eta: float = 1e-2
+    K: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class _UnhashableCfg:
+    seed: int = 0
+    hidden: list = dataclasses.field(default_factory=lambda: [16, 16])
+
+
+@dataclasses.dataclass(frozen=True)
+class _UnstableCfg:
+    seed: int = 0
+    tag: object = dataclasses.field(default_factory=object)
+
+
+@dataclasses.dataclass(frozen=True)
+class _NoDefaultCfg:
+    seed: int
+    eta: float
+
+
+def test_unhashable_static_field_flagged():
+    findings = audit_static_config("fixture", _UnhashableCfg, ())
+    assert _rules(findings) == {"unhashable-static"}
+    assert findings[0].line > 0 and findings[0].path.endswith(
+        "test_analysis_retrace.py")
+
+
+def test_unstable_static_key_flagged():
+    findings = audit_static_config("fixture", _UnstableCfg, ())
+    assert _rules(findings) == {"unstable-static-key"}
+
+
+def test_default_config_must_construct():
+    findings = audit_static_config("fixture", _NoDefaultCfg, ())
+    assert _rules(findings) == {"default-config"}
+
+
+def test_missing_traced_field_flagged():
+    findings = audit_static_config("fixture", _GoodCfg,
+                                   ("eta", "does_not_exist"))
+    assert _rules(findings) == {"traced-field-missing"}
+
+
+def test_lane_split_leak_flagged(monkeypatch):
+    # regression guard: if engine.lane_split stopped blanking traced
+    # fields, every swept value would compile its own program
+    def broken_lane_split(cfg, traced_fields):
+        traced = tuple(float(getattr(cfg, n)) for n in traced_fields)
+        return engine.static_key(cfg), traced_fields, traced
+
+    monkeypatch.setattr(engine, "lane_split", broken_lane_split)
+    findings = audit_static_config("fixture", _GoodCfg, ("eta",))
+    assert _rules(findings) == {"traced-leaks-into-static"}
+
+
+def test_clean_fixture_config():
+    assert audit_static_config("fixture", _GoodCfg, ("eta",)) == []
+
+
+def test_registry_configs_clean():
+    assert audit_static() == []
+
+
+@pytest.mark.slow
+def test_compile_count_gate():
+    assert audit_compiles() == []

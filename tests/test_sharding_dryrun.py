@@ -69,14 +69,14 @@ for arch in ["llama3_2_1b", "deepseek_v2_lite_16b"]:
     cfg = reduced(get_config(arch))
     cfg = dataclasses.replace(cfg, fed_axis="data")
     fed = FedConfig(aggregator="rfa", kappa=2, n_byz=1)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
     step, state_shape, batch, _ = make_fed_step(
-        cfg, fed, mesh, large=True, per_agent_batch=2, seq_len=32)
+        cfg, fed, mesh, large=True, per_agent_batch=2, seq_len=32, key=key)
     K = jax.tree.leaves(state_shape.params)[0].shape[0]
     mask = jax.ShapeDtypeStruct((K,), jnp.bool_)
-    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
     compiled = step.lower(state_shape, batch, mask, key).compile()
     assert compiled.cost_analysis()["flops"] > 0
-    pf, dc, specs = make_serve_fns(cfg, mesh, batch=4, seq_len=64)
+    pf, dc, specs = make_serve_fns(cfg, mesh, batch=4, seq_len=64, key=key)
     tok = jax.ShapeDtypeStruct((4, 1), jnp.int32)
     dc.lower(specs["params_shape"], tok, specs["cache_shape"]).compile()
     print(arch, "COMPILE_OK")

@@ -38,6 +38,8 @@ import jax.numpy as jnp
 
 from benchmarks.timing import min_time_s
 
+from repro import obs
+
 K = 8
 N_BYZ = 1
 AGGREGATORS = ("krum", "rfa", "trimmed_mean")
@@ -101,16 +103,15 @@ def run(sizes=None, repeats: int = 20, smoke: bool = False) -> dict:
     pallas_backend = "pallas" if dispatch.on_tpu() else "pallas-interpret"
     key = jax.random.PRNGKey(0)
     rows = []
-    print("aggregator,backend,K,D,us_per_call,temp_bytes", flush=True)
+    obs.progress("aggregator,backend,K,D,us_per_call,temp_bytes")
     for D in sizes:
         x = jax.random.normal(key, (K, D))
         for name in AGGREGATORS:
             for backend in ("jnp", pallas_backend, "flat"):
                 if (backend == "pallas-interpret"
                         and D > INTERPRET_MAX_D):
-                    print(f"# skip {name}/{backend} at D={D} "
-                          f"(> INTERPRET_MAX_D={INTERPRET_MAX_D})",
-                          flush=True)
+                    obs.progress(f"# skip {name}/{backend} at D={D} "
+                                 f"(> INTERPRET_MAX_D={INTERPRET_MAX_D})")
                     continue
                 fn = _make_fn(name, backend, pallas_backend)
                 us = min_time_s(fn, x, key, repeats=repeats) * 1e6
@@ -119,8 +120,7 @@ def run(sizes=None, repeats: int = 20, smoke: bool = False) -> dict:
                              "K": K, "D": D, "us_per_call": us,
                              "arg_bytes": arg_b, "out_bytes": out_b,
                              "temp_bytes": temp_b})
-                print(f"{name},{backend},{K},{D},{us:.1f},{temp_b}",
-                      flush=True)
+                obs.progress(f"{name},{backend},{K},{D},{us:.1f},{temp_b}")
     doc = {"bench": "aggregation", "backend": jax.default_backend(),
            "n_devices": jax.device_count(), "smoke": smoke,
            "repeats": repeats, "rows": rows}
@@ -131,7 +131,7 @@ def run(sizes=None, repeats: int = 20, smoke: bool = False) -> dict:
     path = os.path.join(os.path.dirname(__file__), name)
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
-    print(f"# wrote {path}", flush=True)
+    obs.progress(f"# wrote {path}")
     return doc
 
 

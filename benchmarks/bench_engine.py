@@ -37,6 +37,8 @@ import numpy as np
 
 import jax
 
+from repro import obs
+
 
 ETAS = (1e-3, 2e-3, 5e-3, 1e-2, 2e-2, 5e-2)
 SEEDS = (0, 1, 2, 3)
@@ -53,7 +55,7 @@ SWEEP_SIZES = (
 
 
 def _row(name, us, derived=""):
-    print(f"{name},{us:.1f},{derived}", flush=True)
+    obs.progress(f"{name},{us:.1f},{derived}")
 
 
 def measure_sweep(env_spec: str, T: int, base: dict) -> list:
@@ -145,7 +147,7 @@ def measure_single() -> list:
 
 
 def run(smoke: bool = False) -> dict:
-    print("name,us_per_call,derived", flush=True)
+    obs.progress("name,us_per_call,derived")
     rows = []
     sizes = SWEEP_SIZES[:1] if smoke else SWEEP_SIZES
     for env_spec, T, base in sizes:
@@ -161,7 +163,7 @@ def run(smoke: bool = False) -> dict:
     path = os.path.join(os.path.dirname(__file__), name)
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
-    print(f"# wrote {path}", flush=True)
+    obs.progress(f"# wrote {path}")
     return doc
 
 

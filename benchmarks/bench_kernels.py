@@ -23,6 +23,8 @@ import jax.numpy as jnp
 
 from benchmarks.timing import min_time_s
 
+from repro import obs
+
 # full ladder; the first entry is the smoke shape, so smoke rows always
 # have a matching key in the committed full-ladder baseline
 SIZES = ((8, 4, 512), (8, 4, 4096), (16, 8, 4096), (16, 8, 32768))
@@ -55,22 +57,21 @@ def run(sizes=SIZES, repeats: int = 20, smoke: bool = False) -> dict:
     pallas_backend = "pallas" if dispatch.on_tpu() else "pallas-interpret"
     key = jax.random.PRNGKey(0)
     rows = []
-    print("kernel,backend,K,P,D,us_per_call", flush=True)
+    obs.progress("kernel,backend,K,P,D,us_per_call")
     for K, P, D in sizes:
         for name, (args, kw) in _cases(K, P, D, key).items():
             kernel = dispatch.get_kernel(name)
             for backend in ("jnp", pallas_backend):
                 if backend == "pallas-interpret" and D > INTERPRET_MAX_D:
-                    print(f"# skip {name}/{backend} at D={D} "
-                          f"(> INTERPRET_MAX_D={INTERPRET_MAX_D})",
-                          flush=True)
+                    obs.progress(f"# skip {name}/{backend} at D={D} "
+                                 f"(> INTERPRET_MAX_D={INTERPRET_MAX_D})")
                     continue
                 fn = jax.jit(lambda *a, _k=kernel.impl(backend), _kw=kw:
                              _k(*a, **_kw))
                 us = min_time_s(fn, *args, repeats=repeats) * 1e6
                 rows.append({"kernel": name, "backend": backend,
                              "K": K, "P": P, "D": D, "us_per_call": us})
-                print(f"{name},{backend},{K},{P},{D},{us:.1f}", flush=True)
+                obs.progress(f"{name},{backend},{K},{P},{D},{us:.1f}")
     doc = {"bench": "kernels", "backend": jax.default_backend(),
            "smoke": smoke, "repeats": repeats, "rows": rows}
     # smoke runs get their own (untracked) file so a CI-sized run can't
@@ -79,7 +80,7 @@ def run(sizes=SIZES, repeats: int = 20, smoke: bool = False) -> dict:
     path = os.path.join(os.path.dirname(__file__), name)
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
-    print(f"# wrote {path}", flush=True)
+    obs.progress(f"# wrote {path}")
     return doc
 
 

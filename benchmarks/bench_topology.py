@@ -29,6 +29,8 @@ import jax.numpy as jnp
 
 from benchmarks.timing import min_time_s
 
+from repro import obs
+
 TOPOLOGIES = ("complete", "ring(k=2)", "ring(k=4)", "torus",
               "small_world(k=4, beta=0.3)", "erdos_renyi(p=0.4, seed=0)",
               "star")
@@ -72,15 +74,14 @@ def measure(K: int, d: int, kappa: int, n_byz: int, repeats: int) -> list:
             "us_per_round": us_round,
             "diameter_contraction": contraction,
         })
-        print(f"topology_{topo.spec.name},{us_round:.1f},"
-              f"K={K};d={d};density={topo.density:.2f};"
-              f"contraction={contraction:.3f};deg_max={topo.deg_max}",
-              flush=True)
+        obs.progress(f"topology_{topo.spec.name},{us_round:.1f},"
+                     f"K={K};d={d};density={topo.density:.2f};"
+                     f"contraction={contraction:.3f};deg_max={topo.deg_max}")
     return rows
 
 
 def run(smoke: bool = False) -> dict:
-    print("name,us_per_round,derived", flush=True)
+    obs.progress("name,us_per_round,derived")
     if smoke:
         rows = measure(*SIZES[0], repeats=10)
     else:
@@ -97,7 +98,7 @@ def run(smoke: bool = False) -> dict:
     path = os.path.join(os.path.dirname(__file__), name)
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
-    print(f"# wrote {path}", flush=True)
+    obs.progress(f"# wrote {path}")
     return doc
 
 

@@ -28,7 +28,12 @@ from typing import Optional, Tuple
 
 def row_key(doc: dict, row: dict) -> Optional[Tuple]:
     """Identity of one benchmark entry, comparable across runs. Includes
-    every size parameter so differently-sized runs never alias."""
+    every size parameter so differently-sized runs never alias.
+
+    Known schemas are keyed explicitly below. Any other doc may declare
+    its own row identity via a top-level ``"key_fields": [...]`` list —
+    each named field is read from the row (falling back to a doc-level
+    value), so new benchmarks gate without touching this file."""
     bench = doc.get("bench")
     if bench == "kernels":
         return (bench, row["kernel"], row["backend"],
@@ -47,6 +52,9 @@ def row_key(doc: dict, row: dict) -> Optional[Tuple]:
         # only us_per_call gates; the *_bytes fields are informational
         return (bench, row["aggregator"], row["backend"],
                 row["K"], row["D"])
+    key_fields = doc.get("key_fields")
+    if key_fields:
+        return (bench, *(row.get(f, doc.get(f)) for f in key_fields))
     return None                       # unknown schema: never gates
 
 

@@ -16,6 +16,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 
 def _timeit(fn, n=10, warmup=2):
     for _ in range(warmup):
@@ -28,7 +30,7 @@ def _timeit(fn, n=10, warmup=2):
 
 
 def _row(name, us, derived=""):
-    print(f"{name},{us:.1f},{derived}", flush=True)
+    obs.progress(f"{name},{us:.1f},{derived}")
 
 
 # ---------------------------------------------------------------------------
@@ -273,7 +275,7 @@ def main() -> None:
                     help="comma-separated benchmark names")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(ALL)
-    print("name,us_per_call,derived")
+    obs.progress("name,us_per_call,derived")
     for n in names:
         ALL[n]()
 

@@ -16,6 +16,7 @@ import sys
 
 sys.path.insert(0, "src")
 
+from repro import obs
 from repro.core import engine
 from repro.core.engine import Experiment
 
@@ -40,23 +41,23 @@ def main():
     res = exp.run()
     n_programs = engine.compile_count()
 
-    print(f"== LargeNoise strength sweep, 3/13 Byzantine, "
-          f"{args.seeds} seeds; {len(res)} scenarios in "
-          f"{n_programs} compiled programs ==")
-    print(f"{'sigma':>8s} {'DecByzPG (rfa)':>18s} "
-          f"{'Dec-PAGE-PG (mean)':>20s}")
+    obs.progress(f"== LargeNoise strength sweep, 3/13 Byzantine, "
+                 f"{args.seeds} seeds; {len(res)} scenarios in "
+                 f"{n_programs} compiled programs ==")
+    obs.progress(f"{'sigma':>8s} {'DecByzPG (rfa)':>18s} "
+                 f"{'Dec-PAGE-PG (mean)':>20s}")
     for s in sigmas:
         robust = res.sel(attack=f"large_noise(sigma={s})",
                          aggregator="rfa")
         naive = res.sel(attack=f"large_noise(sigma={s})",
                         aggregator="mean")
-        print(f"{s:8.0f} "
-              f"{robust['final_return_mean']:9.1f}"
-              f"±{robust['final_return_ci95']:<7.1f} "
-              f"{naive['final_return_mean']:11.1f}"
-              f"±{naive['final_return_ci95']:<7.1f}")
-    print("\nDecByzPG holds its return as sigma grows; the naive mean "
-          "baseline degrades (the paper's Fig. 3 phenomenon).")
+        obs.progress(f"{s:8.0f} "
+                     f"{robust['final_return_mean']:9.1f}"
+                     f"±{robust['final_return_ci95']:<7.1f} "
+                     f"{naive['final_return_mean']:11.1f}"
+                     f"±{naive['final_return_ci95']:<7.1f}")
+    obs.progress("\nDecByzPG holds its return as sigma grows; the naive mean "
+                 "baseline degrades (the paper's Fig. 3 phenomenon).")
 
 
 if __name__ == "__main__":

@@ -10,6 +10,7 @@ import sys
 
 sys.path.insert(0, "src")
 
+from repro import obs
 from repro.core.engine import Experiment
 
 
@@ -26,13 +27,13 @@ def main():
     res = exp.run()
     robust = res.sel(aggregator="rfa")
     naive = res.sel(aggregator="mean")
-    print(f"attack={args.attack}, 3/13 Byzantine (centralized, "
-          f"{args.seeds} seeds)")
-    print(f"ByzPG (RFA):        final return "
-          f"{robust['final_return_mean']:.1f}"
-          f"±{robust['final_return_ci95']:.1f}")
-    print(f"Fed-PAGE-PG (mean): final return "
-          f"{naive['final_return_mean']:.1f}±{naive['final_return_ci95']:.1f}")
+    obs.progress(f"attack={args.attack}, 3/13 Byzantine (centralized, "
+                 f"{args.seeds} seeds)")
+    obs.progress(f"ByzPG (RFA):        final return "
+                 f"{robust['final_return_mean']:.1f}"
+                 f"±{robust['final_return_ci95']:.1f}")
+    obs.progress(f"Fed-PAGE-PG (mean): final return "
+                 f"{naive['final_return_mean']:.1f}±{naive['final_return_ci95']:.1f}")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,8 @@ import argparse
 import os
 import sys
 
+from repro import obs
+
 sys.path.insert(0, "src")
 
 
@@ -83,15 +85,15 @@ def main():
                 + (f"D-sharded over {len(devs)} devices" if sharded
                    else "single device"))
 
-    print(f"{cfg.name}: K={K}, {args.byz} Byzantine (LargeNoise), "
-          f"RFA + GDA(kappa=3), PAGE p={fed.page_p} — {path}")
+    obs.progress(f"{cfg.name}: K={K}, {args.byz} Byzantine (LargeNoise), "
+                 f"RFA + GDA(kappa=3), PAGE p={fed.page_p} — {path}")
     for t in range(args.steps):
         c = common_sample_coin(t, 0, fed.page_p)
         key, k = jax.random.split(key)
         state, m = steps[c](state, pipe.batch(t), mask, k)
-        print(f"step {t:3d} coin={'N' if c else 'B'} "
-              f"honest_loss={float(m['loss']):.4f} "
-              f"diam={float(m['diameter']):.2e}", flush=True)
+        obs.progress(f"step {t:3d} coin={'N' if c else 'B'} "
+                     f"honest_loss={float(m['loss']):.4f} "
+                     f"diam={float(m['diameter']):.2e}")
 
 
 if __name__ == "__main__":

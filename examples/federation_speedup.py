@@ -13,6 +13,7 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
+from repro import obs
 from repro.core.engine import Experiment
 
 
@@ -21,8 +22,8 @@ def main():
     ap.add_argument("--iters", type=int, default=30)
     ap.add_argument("--seeds", type=int, default=3)
     args = ap.parse_args()
-    print(f"== DecByzPG speed-up in K (alpha=0, {args.seeds} seeds); "
-          f"K=1 is PAGE-PG ==")
+    obs.progress(f"== DecByzPG speed-up in K (alpha=0, {args.seeds} seeds); "
+                 f"K=1 is PAGE-PG ==")
     exp = Experiment(algo="decbyzpg", env="cartpole(horizon=200)",
                      T=args.iters, seeds=args.seeds,
                      axes={"K": (1, 5, 13)}, N=20, B=4, eta=2e-2,
@@ -31,18 +32,18 @@ def main():
     res = exp.run()
     curves = {scn.K: out for scn, out in res.items()}
     for K, out in curves.items():
-        print(f"K={K:2d}: final return {out['final_return_mean']:6.1f}"
-              f"±{out['final_return_ci95']:.1f} after "
-              f"{out['samples'][:, -1].mean():.0f} samples/agent")
+        obs.progress(f"K={K:2d}: final return {out['final_return_mean']:6.1f}"
+                     f"±{out['final_return_ci95']:.1f} after "
+                     f"{out['samples'][:, -1].mean():.0f} samples/agent")
     # return achieved at a fixed per-agent sample budget
     budget = curves[13]["samples"].mean(axis=0)[-1]
-    print(f"\nreturn at equal per-agent sample budget ({budget:.0f}):")
+    obs.progress(f"\nreturn at equal per-agent sample budget ({budget:.0f}):")
     for K, out in curves.items():
         samples = out["samples"].mean(axis=0)
         idx = min(int(np.searchsorted(samples, budget)),
                   out["returns_mean"].shape[0] - 1)
         r = out["returns_mean"][max(idx - 2, 0):idx + 1].mean()
-        print(f"  K={K:2d}: {r:.1f}")
+        obs.progress(f"  K={K:2d}: {r:.1f}")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ import sys
 
 sys.path.insert(0, "src")
 
+from repro import obs
 from repro.core.engine import Experiment
 
 
@@ -31,26 +32,26 @@ def main():
         K=13, n_byz=3, attack=args.attack, N=20, B=4, eta=2e-2,
         override=lambda c: dataclasses.replace(
             c, kappa=0 if c.aggregator.name == "mean" else 5))
-    print(f"== DecByzPG (robust) vs Dec-PAGE-PG (naive), attack="
-          f"{args.attack}, 3/13 Byzantine, {args.seeds} seeds ==")
+    obs.progress(f"== DecByzPG (robust) vs Dec-PAGE-PG (naive), attack="
+                 f"{args.attack}, 3/13 Byzantine, {args.seeds} seeds ==")
     res = exp.run()
     robust = res.sel(aggregator="rfa")
     naive = res.sel(aggregator="mean")
 
-    print(f"{'samples/agent':>14s} {'DecByzPG':>16s} {'Dec-PAGE-PG':>16s}")
+    obs.progress(f"{'samples/agent':>14s} {'DecByzPG':>16s} {'Dec-PAGE-PG':>16s}")
     budget = robust["samples"].mean(axis=0)
     for i in range(0, args.iters, max(args.iters // 10, 1)):
-        print(f"{budget[i]:14.0f} "
-              f"{robust['returns_mean'][i]:8.1f}±{robust['returns_ci95'][i]:<7.1f} "
-              f"{naive['returns_mean'][i]:8.1f}±{naive['returns_ci95'][i]:<7.1f}")
-    print(f"final (mean of last 3, ±95% CI over seeds): "
-          f"DecByzPG={robust['final_return_mean']:.1f}"
-          f"±{robust['final_return_ci95']:.1f}  "
-          f"Dec-PAGE-PG={naive['final_return_mean']:.1f}"
-          f"±{naive['final_return_ci95']:.1f}")
-    print(f"honest parameter diameter under attack: "
-          f"{robust['diameter'][:, -1].mean():.2e} "
-          f"(agreement keeps agents synced)")
+        obs.progress(f"{budget[i]:14.0f} "
+                     f"{robust['returns_mean'][i]:8.1f}±{robust['returns_ci95'][i]:<7.1f} "
+                     f"{naive['returns_mean'][i]:8.1f}±{naive['returns_ci95'][i]:<7.1f}")
+    obs.progress(f"final (mean of last 3, ±95% CI over seeds): "
+                 f"DecByzPG={robust['final_return_mean']:.1f}"
+                 f"±{robust['final_return_ci95']:.1f}  "
+                 f"Dec-PAGE-PG={naive['final_return_mean']:.1f}"
+                 f"±{naive['final_return_ci95']:.1f}")
+    obs.progress(f"honest parameter diameter under attack: "
+                 f"{robust['diameter'][:, -1].mean():.2e} "
+                 f"(agreement keeps agents synced)")
 
 
 if __name__ == "__main__":

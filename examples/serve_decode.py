@@ -12,6 +12,7 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import get_config, reduced
 from repro.models.model import decode_step, init_params, prefill
 
@@ -50,9 +51,9 @@ def main():
         outs.append(tok)
     jax.block_until_ready(tok)
     dt = (time.time() - t0) / max(args.gen - 1, 1)
-    print(f"{cfg.name} cache_len={W} window={window}: "
-          f"{dt*1e3:.2f} ms/token on CPU")
-    print("generated:", [int(x) for x in jnp.stack(outs, 1)[0][:16]])
+    obs.progress(f"{cfg.name} cache_len={W} window={window}: "
+                 f"{dt*1e3:.2f} ms/token on CPU")
+    obs.progress(f"generated: {[int(x) for x in jnp.stack(outs, 1)[0][:16]]}")
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ import sys
 
 sys.path.insert(0, "src")
 
+from repro import obs
 from repro.core.engine import Experiment
 from repro.topology import resolve_topology
 
@@ -37,24 +38,24 @@ def main():
         seeds=args.seeds, axes={"topology": TOPOLOGIES},
         K=args.K, n_byz=args.n_byz, attack=args.attack, per_receiver=True,
         aggregator="rfa", agreement="gda", kappa=5, N=20, B=4, eta=2e-2)
-    print(f"== DecByzPG topology sweep: K={args.K}, {args.n_byz} Byzantine "
-          f"({args.attack}, per-receiver equivocation), {args.seeds} seeds ==")
+    obs.progress(f"== DecByzPG topology sweep: K={args.K}, {args.n_byz} Byzantine "
+                 f"({args.attack}, per-receiver equivocation), {args.seeds} seeds ==")
     res = exp.run()
 
-    print(f"{'topology':>28s} {'density':>8s} {'min_deg':>8s} {'gap':>6s} "
-          f"{'2f+1?':>6s} {'final_return':>14s} {'Δ₂ (diam)':>10s}")
+    obs.progress(f"{'topology':>28s} {'density':>8s} {'min_deg':>8s} {'gap':>6s} "
+                 f"{'2f+1?':>6s} {'final_return':>14s} {'Δ₂ (diam)':>10s}")
     for spec in TOPOLOGIES:
         topo = resolve_topology(spec, args.K)
         out = res.sel(topology=spec)
         feasible = "yes" if topo.tolerates(args.n_byz) else "NO"
-        print(f"{topo.name:>28s} {topo.density:8.2f} "
-              f"{topo.min_in_degree:8d} {topo.spectral_gap:6.2f} "
-              f"{feasible:>6s} "
-              f"{out['final_return_mean']:7.1f}±{out['final_return_ci95']:<5.1f} "
-              f"{out['final_diameter_mean']:10.2e}")
-    print("\n(min_deg > 2·n_byz is the necessary BFT connectivity "
-          "condition; graphs failing it cannot bound Byzantine influence "
-          "— watch Δ₂ fail to contract on the star.)")
+        obs.progress(f"{topo.name:>28s} {topo.density:8.2f} "
+                     f"{topo.min_in_degree:8d} {topo.spectral_gap:6.2f} "
+                     f"{feasible:>6s} "
+                     f"{out['final_return_mean']:7.1f}±{out['final_return_ci95']:<5.1f} "
+                     f"{out['final_diameter_mean']:10.2e}")
+    obs.progress("\n(min_deg > 2·n_byz is the necessary BFT connectivity "
+                 "condition; graphs failing it cannot bound Byzantine influence "
+                 "— watch Δ₂ fail to contract on the star.)")
 
 
 if __name__ == "__main__":

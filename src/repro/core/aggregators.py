@@ -123,6 +123,48 @@ def centered_clip(x, key=None, tau: float = 1.0, n_iter: int = 5,
     return v
 
 
+def suspicion_scores(spec, x: jnp.ndarray, n_byz: int) -> jnp.ndarray:
+    """Per-sender Byzantine-suspicion scores ``(K,)`` — the telemetry
+    forensics signal behind :func:`rejection_mask` (DESIGN.md §8).
+
+    Aggregators with an explicit selection expose it directly: Krum's
+    score (high = far from the closest-neighbor mass) and the cw
+    trimmed-mean family's per-coordinate trim fraction. Everything else
+    (mean, rfa, cwmed, bucketing wrappers) falls back to the distance
+    from the coordinate-wise median — a deterministic, key-free proxy
+    for "how far outside the honest cluster this sender landed". It is
+    a diagnostic view, not the aggregation itself (bucketed variants
+    score the raw messages, not the bucket means).
+    """
+    spec = Spec.of(spec)
+    K = x.shape[0]
+    if spec.name == "krum":
+        n_near = max(K - max(n_byz, 1) - 2, 1)
+        return get_kernel("krum_score")(x, n_near)
+    if spec.name in ("trimmed_mean", "cwtm"):
+        nt = max(n_byz, 1)
+        # rank of each sender per coordinate; trimmed = in either tail
+        ranks = jnp.argsort(jnp.argsort(x, axis=0), axis=0)
+        trimmed = (ranks < nt) | (ranks >= K - nt)
+        return jnp.mean(trimmed.astype(x.dtype), axis=1)
+    med = jnp.median(x, axis=0)
+    return jnp.sqrt(jnp.sum((x - med[None]) ** 2, axis=1))
+
+
+def rejection_mask(spec, x: jnp.ndarray, n_byz: int) -> jnp.ndarray:
+    """(K,) bool: the ``n_byz`` most-suspicious senders this round, per
+    :func:`suspicion_scores`. Cardinality is pinned to the configured
+    tolerance so the confusion tally vs the true Byzantine set
+    (``repro.obs.confusion_tally``) has comparable precision/recall
+    semantics across aggregators. All-False when ``n_byz == 0``."""
+    K = x.shape[0]
+    if n_byz <= 0:
+        return jnp.zeros((K,), bool)
+    scores = suspicion_scores(spec, x, n_byz)
+    _, idx = jax.lax.top_k(scores, n_byz)
+    return jnp.zeros((K,), bool).at[idx].set(True)
+
+
 def resilient_momentum_update(agg: Callable, momenta, beta: float,
                               grads, key=None):
     """One step of resilient averaging of momentums [23]: workers keep

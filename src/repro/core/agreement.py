@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.aggregators import pairwise_sq_dists
 from repro.core.registry import REGISTRY, Spec, register, resolve
 from repro.kernels import dispatch
@@ -139,7 +140,8 @@ def avg_agree(theta: jnp.ndarray, kappa: int, n_byz: int,
               alpha_bar: Optional[float] = None,
               topology=None,
               kernel_backend: Optional[str] = None,
-              sharded: Optional[bool] = None) -> jnp.ndarray:
+              sharded: Optional[bool] = None,
+              telemetry: bool = False) -> jnp.ndarray:
     """Simulate Avg-Agree_κ over K agents (paper Algorithm 3, generalized
     to gossip graphs).
 
@@ -167,6 +169,8 @@ def avg_agree(theta: jnp.ndarray, kappa: int, n_byz: int,
     gather, so low-degree agents see extra copies of their own value.
     Returns the (K, d) post-agreement parameters (Byzantine rows carry the
     value an honest agent in that slot would compute; callers mask them).
+    ``telemetry`` labels the gossip-round body with a ``jax.named_scope``
+    (profile-readable HLO metadata; off, the program text is untouched).
     """
     K, d = theta.shape
     if kernel_backend is None:
@@ -204,6 +208,10 @@ def avg_agree(theta: jnp.ndarray, kappa: int, n_byz: int,
     rows = jnp.arange(K)[:, None]
 
     def one_round(th, k):
+        with obs.named_phase("agree.round", telemetry):
+            return _round_body(th, k)
+
+    def _round_body(th, k):
         if attack is None:
             if m.reduce is not None:
                 # honest broadcast: gather + reduce fused in one kernel

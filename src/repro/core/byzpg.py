@@ -32,8 +32,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import attacks as attacks_lib
 from repro.core import engine
+from repro.core.aggregators import rejection_mask
 from repro.core.registry import normalize_spec_fields, register, resolve
 from repro.core.tree import ravel
 from repro.optim.optimizers import get_optimizer
@@ -62,6 +64,8 @@ class ByzPGConfig:
     optimizer: object = "adam"
     baseline: float = 0.0
     seed: int = 0
+    telemetry: bool = False     # static (in static_key): in-loop obs taps
+    # + per-round rejected-agent masks; off = exact seed program
 
     def __post_init__(self):
         normalize_spec_fields(self, _SPEC_FIELDS)
@@ -132,10 +136,12 @@ def build_byzpg_step(env, cfg: ByzPGConfig, traced=None):
                 sample_weights=w_small))[0]
             return g, g_old, jnp.sum(w * batch_return(traj))
 
-        g, g_old, rets = jax.vmap(one)(jax.random.split(k_traj, cfg.K),
-                                       scales)
-        msgs = attack(g, byz_mask, k_att)
-        v_large = agg(msgs, k_agg)
+        with obs.named_phase("byzpg.estimate", cfg.telemetry):
+            g, g_old, rets = jax.vmap(one)(jax.random.split(k_traj, cfg.K),
+                                           scales)
+        with obs.named_phase("byzpg.aggregate", cfg.telemetry):
+            msgs = attack(g, byz_mask, k_att)
+            v_large = agg(msgs, k_agg)
         # small step: w == w_small, so g[server] is exactly ĝ_B(θ_t) on the
         # server's fresh batch and g_old[server] the IS estimate at θ_prev.
         v_page = g[server] + v_prev - g_old[server]
@@ -144,7 +150,19 @@ def build_byzpg_step(env, cfg: ByzPGConfig, traced=None):
         honest_ret = jnp.sum(jnp.where(byz_mask, 0.0, rets)) \
             / jnp.maximum(jnp.sum(~byz_mask), 1)
         ret = jnp.where(coin, honest_ret, rets[server])
-        return (new_vec, vec, v, opt_state), (ret, coin)
+        if not cfg.telemetry:
+            return (new_vec, vec, v, opt_state), (ret, coin)
+        # observers only (no extra PRNG consumption): the aggregation is
+        # live on large rounds; small rounds still score the attacked
+        # worker messages the server would have received
+        norms = jnp.linalg.norm(g, axis=1)
+        grad_norm = jnp.sum(jnp.where(byz_mask, 0.0, norms)) \
+            / jnp.maximum(jnp.sum(~byz_mask), 1)
+        rejected = rejection_mask(cfg.aggregator, msgs, cfg.n_byz)
+        obs.tap("byzpg", t=t, coin=coin, honest_return=ret,
+                grad_norm=grad_norm, rejected=rejected)
+        return (new_vec, vec, v, opt_state), (ret, coin, grad_norm,
+                                              rejected)
 
     return step
 
@@ -154,11 +172,14 @@ def build_byzpg_loop(env, cfg: ByzPGConfig, T: int, traced=None):
     step = build_byzpg_step(env, cfg, traced)
 
     def loop(vec0, prev_vec0, v0, opt_state0, step_keys, coin_key):
-        (vec, _, _, _), (rets, coins) = jax.lax.scan(
+        (vec, _, _, _), ys = jax.lax.scan(
             lambda carry, xs: step(carry, xs, coin_key),
             (vec0, prev_vec0, v0, opt_state0),
             (jnp.arange(T), step_keys))
-        return {"vec": vec, "returns": rets, "coins": coins}
+        hist = {"vec": vec, "returns": ys[0], "coins": ys[1]}
+        if cfg.telemetry:
+            hist["grad_norm"], hist["rejected"] = ys[2], ys[3]
+        return hist
 
     return loop
 
@@ -176,9 +197,15 @@ def fused_byzpg(env, cfg: ByzPGConfig, T: int):
 def _finalize(cfg, unravel, hist, eval_every: int) -> dict:
     coins = np.asarray(hist["coins"])
     samples = np.cumsum(np.where(coins, cfg.N, cfg.B))
-    return {"returns": np.asarray(hist["returns"])[::eval_every],
-            "samples": samples[::eval_every],
-            "params": unravel(hist["vec"])}
+    out = {"returns": np.asarray(hist["returns"])[::eval_every],
+           "samples": samples[::eval_every],
+           "params": unravel(hist["vec"])}
+    if "rejected" in hist:
+        out["grad_norm"] = np.asarray(hist["grad_norm"])
+        out["rejected"] = np.asarray(hist["rejected"])
+        out["aggregator_confusion"] = obs.confusion_tally(
+            out["rejected"], cfg.n_byz)
+    return out
 
 
 def run_byzpg(env, cfg: ByzPGConfig, T: int, eval_every: int = 1):
@@ -204,10 +231,11 @@ def run_byzpg_legacy(env, cfg: ByzPGConfig, T: int, eval_every: int = 1):
     step_keys = jax.random.split(ks.loop, T)
     rets, coins = [], []
     for t in range(T):
-        carry, (ret, coin) = step(carry, (jnp.int32(t), step_keys[t]),
-                                  ks.coin)
-        rets.append(float(ret))
-        coins.append(bool(coin))
+        # ys grows telemetry entries under cfg.telemetry; the first two
+        # are always (return, coin)
+        carry, ys = step(carry, (jnp.int32(t), step_keys[t]), ks.coin)
+        rets.append(float(ys[0]))
+        coins.append(bool(ys[1]))
     hist = {"vec": carry[0], "returns": np.asarray(rets),
             "coins": np.asarray(coins)}
     return _finalize(cfg, unravel, hist, eval_every)

@@ -32,8 +32,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import attacks as attacks_lib
 from repro.core import engine
+from repro.core.aggregators import rejection_mask
 from repro.core.agreement import avg_agree, honest_diameter
 from repro.core.registry import normalize_spec_fields, register, resolve
 from repro.core.tree import ravel
@@ -73,6 +75,8 @@ class DecByzPGConfig:
     baseline: float = 0.0
     optimizer: object = "adam"  # paper App. D applies Adam to the PAGE
     seed: int = 0               # direction; "sgd" = Algorithm 2 line 8
+    telemetry: bool = False     # static (in static_key): in-loop obs taps
+    # + per-round rejected-agent masks; off = exact seed program
 
     def __post_init__(self):
         normalize_spec_fields(self, _SPEC_FIELDS)
@@ -157,27 +161,42 @@ def build_decbyzpg_step(env, cfg: DecByzPGConfig, traced=None):
         coin = engine.page_coin(coin_key, t, switch_p)
         w = jnp.where(coin, w_large, w_small)
         k_traj, k_att, k_agg, k_agr = jax.random.split(key, 4)
-        g, g_old, rets = jax.vmap(
-            lambda tv, tp, k, s: agent_estimate(tv, tp, k, w, s)
-        )(theta, theta_prev, jax.random.split(k_traj, cfg.K), scales)
-        page = (theta - theta_prev) / eta - g_old
-        tilde_v = jnp.where(coin, g, g + page)
-        msgs = attack(tilde_v, byz_mask, k_att)
-        # every agent aggregates the same broadcast set (v^(k));
-        # per-receiver inconsistency is exercised inside Avg-Agree.
-        v = jax.vmap(lambda k: agg(msgs, k))(
-            jax.random.split(k_agg, cfg.K))
+        with obs.named_phase("decbyzpg.estimate", cfg.telemetry):
+            g, g_old, rets = jax.vmap(
+                lambda tv, tp, k, s: agent_estimate(tv, tp, k, w, s)
+            )(theta, theta_prev, jax.random.split(k_traj, cfg.K), scales)
+            page = (theta - theta_prev) / eta - g_old
+            tilde_v = jnp.where(coin, g, g + page)
+        with obs.named_phase("decbyzpg.aggregate", cfg.telemetry):
+            msgs = attack(tilde_v, byz_mask, k_att)
+            # every agent aggregates the same broadcast set (v^(k));
+            # per-receiver inconsistency is exercised inside Avg-Agree.
+            v = jax.vmap(lambda k: agg(msgs, k))(
+                jax.random.split(k_agg, cfg.K))
         theta_tilde, opt_state = jax.vmap(opt.update)(v, opt_state, theta)
-        if cfg.kappa > 0:
-            theta_new = avg_agree(theta_tilde, cfg.kappa, cfg.n_byz,
-                                  byz_mask, cfg.agreement, agr_attack,
-                                  k_agr, topology=topo)
-        else:
-            theta_new = theta_tilde
+        with obs.named_phase("decbyzpg.agree", cfg.telemetry):
+            if cfg.kappa > 0:
+                theta_new = avg_agree(theta_tilde, cfg.kappa, cfg.n_byz,
+                                      byz_mask, cfg.agreement, agr_attack,
+                                      k_agr, topology=topo,
+                                      telemetry=cfg.telemetry)
+            else:
+                theta_new = theta_tilde
         honest_ret = jnp.sum(jnp.where(byz_mask, 0.0, rets)) \
             / jnp.maximum(jnp.sum(~byz_mask), 1)
         diam = honest_diameter(theta_new, ~byz_mask)
-        return (theta_new, theta, opt_state), (honest_ret, coin, diam)
+        if not cfg.telemetry:
+            return (theta_new, theta, opt_state), (honest_ret, coin, diam)
+        # telemetry plane: observers only — no extra PRNG consumption, so
+        # the returns/diameter histories are identical to the off path
+        norms = jnp.linalg.norm(tilde_v, axis=1)
+        grad_norm = jnp.sum(jnp.where(byz_mask, 0.0, norms)) \
+            / jnp.maximum(jnp.sum(~byz_mask), 1)
+        rejected = rejection_mask(cfg.aggregator, msgs, cfg.n_byz)
+        obs.tap("decbyzpg", t=t, coin=coin, honest_return=honest_ret,
+                diameter=diam, grad_norm=grad_norm, rejected=rejected)
+        return (theta_new, theta, opt_state), \
+            (honest_ret, coin, diam, grad_norm, rejected)
 
     return step
 
@@ -188,12 +207,15 @@ def build_decbyzpg_loop(env, cfg: DecByzPGConfig, T: int, traced=None):
     step = build_decbyzpg_step(env, cfg, traced)
 
     def loop(theta0, theta_prev0, opt0, step_keys, coin_key):
-        (theta, _, _), (rets, coins, diams) = jax.lax.scan(
+        (theta, _, _), ys = jax.lax.scan(
             lambda carry, xs: step(carry, xs, coin_key),
             (theta0, theta_prev0, opt0),
             (jnp.arange(T), step_keys))
-        return {"theta": theta, "returns": rets, "coins": coins,
-                "diameter": diams}
+        hist = {"theta": theta, "returns": ys[0], "coins": ys[1],
+                "diameter": ys[2]}
+        if cfg.telemetry:
+            hist["grad_norm"], hist["rejected"] = ys[3], ys[4]
+        return hist
 
     return loop
 
@@ -213,11 +235,17 @@ def _finalize(cfg, unravel, hist) -> dict:
     coins = np.asarray(hist["coins"])
     theta = hist["theta"]
     honest_idx = min(cfg.n_byz, cfg.K - 1)
-    return {"returns": np.asarray(hist["returns"]),
-            "samples": np.cumsum(np.where(coins, cfg.N, cfg.B)),
-            "diameter": np.asarray(hist["diameter"]),
-            "params": unravel(theta[honest_idx]),
-            "theta": theta}
+    out = {"returns": np.asarray(hist["returns"]),
+           "samples": np.cumsum(np.where(coins, cfg.N, cfg.B)),
+           "diameter": np.asarray(hist["diameter"]),
+           "params": unravel(theta[honest_idx]),
+           "theta": theta}
+    if "rejected" in hist:
+        out["grad_norm"] = np.asarray(hist["grad_norm"])
+        out["rejected"] = np.asarray(hist["rejected"])
+        out["aggregator_confusion"] = obs.confusion_tally(
+            out["rejected"], cfg.n_byz)
+    return out
 
 
 def run_decbyzpg(env, cfg: DecByzPGConfig, T: int):
@@ -244,11 +272,13 @@ def run_decbyzpg_legacy(env, cfg: DecByzPGConfig, T: int):
     step_keys = jax.random.split(ks.loop, T)
     rets, coins, diams = [], [], []
     for t in range(T):
-        (theta, theta_prev, opt), (ret, coin, diam) = step(
+        # ys grows telemetry entries under cfg.telemetry; the first three
+        # are always (return, coin, diameter)
+        (theta, theta_prev, opt), ys = step(
             (theta, theta_prev, opt), (jnp.int32(t), step_keys[t]), ks.coin)
-        rets.append(float(ret))
-        coins.append(bool(coin))
-        diams.append(float(diam))
+        rets.append(float(ys[0]))
+        coins.append(bool(ys[1]))
+        diams.append(float(ys[2]))
     hist = {"theta": theta, "returns": np.asarray(rets),
             "coins": np.asarray(coins), "diameter": np.asarray(diams)}
     return _finalize(cfg, unravel, hist)

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.registry import Spec, resolve
 
 # ---------------------------------------------------------------------------
@@ -76,10 +77,24 @@ _COMPILED: dict = {}
 def compiled(key, build: Callable):
     """Return the cached compiled callable for ``key``, building (and
     jitting) it on first use.  Keys must capture everything static about
-    the loop: algorithm, env identity, config minus seed, T, batch size."""
+    the loop: algorithm, env identity, config minus seed, T, batch size.
+
+    When host telemetry is on (:func:`repro.obs.enable`) each lookup
+    emits a hit/miss record on the ``engine.cache`` stream and the build
+    runs under a trace span; off, the only cost is one ``enabled()``
+    check."""
     fn = _COMPILED.get(key)
-    if fn is None:
-        fn = _COMPILED[key] = build()
+    if fn is not None:
+        if obs.enabled():
+            obs.record("engine.cache", event="hit", key=repr(key))
+        return fn
+    if obs.enabled():
+        obs.record("engine.cache", event="miss", key=repr(key))
+        with obs.host_span("engine.build", key=repr(key)):
+            fn = build()
+    else:
+        fn = build()
+    _COMPILED[key] = fn
     return fn
 
 
@@ -356,6 +371,12 @@ def summarize(hist: dict, cfg) -> dict:
         diam = out["diameter"]
         out["diameter_mean"] = diam.mean(axis=0)
         out["final_diameter_mean"] = float(diam[:, -1].mean())
+    if "rejected" in out:
+        # telemetry plane (cfg.telemetry): aggregator-as-detector tally
+        # of per-round rejected masks vs the configured Byzantine set
+        out["grad_norm_mean"] = out["grad_norm"].mean(axis=0)
+        out["aggregator_confusion"] = obs.confusion_tally(
+            out["rejected"], getattr(cfg, "n_byz", 0))
     return out
 
 
@@ -427,9 +448,14 @@ def run_grid(env, grid: ScenarioGrid, T: int, algo="decbyzpg",
         scenarios.append((key_cls(*combo), cfg))
     if not lanes:
         results = {}
-        for scn, cfg in scenarios:
+        for si, (scn, cfg) in enumerate(scenarios):
+            if obs.enabled():
+                obs.progress(f"run_grid {si + 1}/{len(scenarios)}: "
+                             f"{dict(scn._asdict())}",
+                             scenario=si, total=len(scenarios))
             loop = seed_batch_loop(env, cfg, T, len(grid.seeds), algo)
-            hist = jax.block_until_ready(loop(seeds))
+            with obs.host_span("run_grid.scenario", scenario=si):
+                hist = jax.block_until_ready(loop(seeds))
             results[scn] = summarize(hist, cfg)
         return results
     # group scenario lanes by static signature: scalar-only axes collapse
@@ -440,16 +466,25 @@ def run_grid(env, grid: ScenarioGrid, T: int, algo="decbyzpg",
         groups.setdefault((static_cfg, names), []).append((scn, cfg, vals))
     S = len(grid.seeds)
     results = {}
-    for (static_cfg, names), members in groups.items():
+    for gi, ((static_cfg, names), members) in enumerate(groups.items()):
         L = len(members)
+        before = compile_count()
         loop = lane_batch_loop(env, static_cfg, T, names, L * S, algo)
+        fresh = compile_count() > before    # first dispatch will compile
+        if obs.enabled():
+            obs.progress(f"run_grid group {gi + 1}/{len(groups)}: "
+                         f"{L} lane(s) x {S} seed(s)"
+                         + (" [compiling]" if fresh else " [cached]"),
+                         group=gi, lanes=L, seeds=S, fresh_compile=fresh)
         # float64 host-side, canonicalized by jnp.asarray to the ambient
         # float dtype (f32 by default, f64 under jax_enable_x64) so the
         # operands match what lanes=False bakes in as Python constants
         vals = np.asarray([m[2] for m in members], np.float64)
         vals_flat = jnp.asarray(np.repeat(vals, S, axis=0))   # (L*S, n)
         seeds_flat = jnp.tile(seeds, L)
-        hist = jax.block_until_ready(loop(vals_flat, seeds_flat))
+        with obs.host_span("run_grid.group", group=gi, lanes=L,
+                           rows=L * S, fresh_compile=fresh):
+            hist = jax.block_until_ready(loop(vals_flat, seeds_flat))
         for i, (scn, cfg, _) in enumerate(members):
             lane = {k: v[i * S:(i + 1) * S] for k, v in hist.items()}
             results[scn] = summarize(lane, cfg)
@@ -557,6 +592,11 @@ class ExperimentResult:
             # Δ₂ diagnostic; absent for algos without agreement (ByzPG)
             if "final_diameter_mean" in r:
                 entry["honest_diameter_final"] = r["final_diameter_mean"]
+            # aggregator-as-Byzantine-detector forensics (cfg.telemetry)
+            if "aggregator_confusion" in r:
+                conf = r["aggregator_confusion"]
+                entry["aggregator_precision"] = conf["precision"]
+                entry["aggregator_recall"] = conf["recall"]
             out[self.scenario_name(scn)] = entry
         return out
 

@@ -20,7 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
+from repro.core.aggregators import rejection_mask
 from repro.core.registry import normalize_spec_fields
 from repro.distributed import aggregation as agg_lib
 from repro.distributed.sharding import (batch_spec, fed_axes, n_agents,
@@ -42,6 +44,8 @@ class FedConfig:
     mix_dtype: Optional[str] = None  # None | "bfloat16" (§Perf opt)
     mix_block: int = 0               # stream agreement in K-blocks (§Perf)
     seed: int = 0
+    telemetry: bool = False          # static: in-step obs taps + phases;
+    # off = the exact pre-telemetry program (no debug_callback in jaxpr)
 
     def __post_init__(self):
         normalize_spec_fields(self, ("aggregator", "attack", "optimizer"))
@@ -88,33 +92,37 @@ def fed_train_step(cfg: ModelConfig, fed: FedConfig, state: FedState,
     grad_fn = jax.grad(lambda p, b: _loss(cfg, p, b))
     loss_fn = jax.value_and_grad(lambda p, b: _loss(cfg, p, b))
 
-    losses, g_new = jax.vmap(loss_fn)(state.params, batch)
+    with obs.named_phase("fed.estimate", fed.telemetry):
+        losses, g_new = jax.vmap(loss_fn)(state.params, batch)
 
-    def _page(_):
-        g_old = jax.vmap(grad_fn)(state.prev_params, batch)
-        return jax.tree.map(lambda a, b, c: a - b + c,
-                            g_new, g_old, state.v)
+        def _page(_):
+            g_old = jax.vmap(grad_fn)(state.prev_params, batch)
+            return jax.tree.map(lambda a, b, c: a - b + c,
+                                g_new, g_old, state.v)
 
-    if isinstance(large, (bool, int)):
-        tilde_v = g_new if large else _page(None)
-    else:
-        tilde_v = jax.lax.cond(large, lambda _: g_new, _page, None)
+        if isinstance(large, (bool, int)):
+            tilde_v = g_new if large else _page(None)
+        else:
+            tilde_v = jax.lax.cond(large, lambda _: g_new, _page, None)
 
     K = byz_mask.shape[0]
     k_att, k_agg = jax.random.split(key)
-    if K == 1:
-        v = tilde_v        # single-agent federation: aggregation is identity
-    else:
-        tilde_v = agg_lib.attack_stacked(fed.attack, tilde_v, byz_mask,
-                                         k_att)
-        v = agg_lib.aggregate(fed.aggregator, tilde_v, fed.n_byz, k_agg)
+    with obs.named_phase("fed.aggregate", fed.telemetry):
+        if K == 1:
+            v = tilde_v    # single-agent federation: aggregation is identity
+        else:
+            tilde_v = agg_lib.attack_stacked(fed.attack, tilde_v, byz_mask,
+                                             k_att)
+            v = agg_lib.aggregate(fed.aggregator, tilde_v, fed.n_byz, k_agg)
 
     opt = get_optimizer(fed.optimizer, fed.lr, maximize=False)
     new_params, new_opt = jax.vmap(opt.update)(v, state.opt_state,
                                                state.params)
     mix_dtype = jnp.bfloat16 if fed.mix_dtype == "bfloat16" else None
-    new_params = agg_lib.gda_agree(new_params, fed.kappa, fed.alpha_bar,
-                                   mix_dtype=mix_dtype, block=fed.mix_block)
+    with obs.named_phase("fed.agree", fed.telemetry):
+        new_params = agg_lib.gda_agree(new_params, fed.kappa, fed.alpha_bar,
+                                       mix_dtype=mix_dtype,
+                                       block=fed.mix_block)
 
     metrics = {
         "loss": jnp.mean(jnp.where(byz_mask, 0.0, losses))
@@ -124,6 +132,17 @@ def fed_train_step(cfg: ModelConfig, fed: FedConfig, state: FedState,
         "diameter": (jnp.zeros(()) if K == 1 else jnp.sqrt(jnp.max(
             agg_lib.stacked_sq_dists(new_params)))),
     }
+    if fed.telemetry:
+        # observers only: per-agent honest gradient norms, computed
+        # leaf-wise so the model-sharded stacks are never gathered
+        sq = sum(jnp.sum(jnp.reshape(l, (K, -1)) ** 2, axis=1)
+                 for l in jax.tree.leaves(tilde_v))
+        metrics["grad_norm"] = jnp.sum(
+            jnp.where(byz_mask, 0.0, jnp.sqrt(sq))) \
+            / jnp.maximum(jnp.sum(~byz_mask), 1)
+        obs.tap("fed", step=state.step, loss=metrics["loss"],
+                diameter=metrics["diameter"],
+                grad_norm=metrics["grad_norm"])
     new_state = FedState(new_params, state.params, v, new_opt,
                          state.step + 1)
     return new_state, metrics
@@ -268,41 +287,59 @@ def fed_train_step_flat(cfg: ModelConfig, fed: FedConfig,
     def loss_vec(vec, b):
         return _loss(cfg, unravel(vec), b)
 
-    losses, g_new = jax.vmap(jax.value_and_grad(loss_vec))(state.theta,
-                                                           batch)
+    with obs.named_phase("fed.estimate", fed.telemetry):
+        losses, g_new = jax.vmap(jax.value_and_grad(loss_vec))(state.theta,
+                                                               batch)
 
-    def _page(_):
-        g_old = jax.vmap(jax.grad(loss_vec))(state.prev, batch)
-        return g_new - g_old + state.v
+        def _page(_):
+            g_old = jax.vmap(jax.grad(loss_vec))(state.prev, batch)
+            return g_new - g_old + state.v
 
-    if isinstance(large, (bool, int)):
-        tilde_v = g_new if large else _page(None)
-    else:
-        tilde_v = jax.lax.cond(large, lambda _: g_new, _page, None)
+        if isinstance(large, (bool, int)):
+            tilde_v = g_new if large else _page(None)
+        else:
+            tilde_v = jax.lax.cond(large, lambda _: g_new, _page, None)
 
     K = byz_mask.shape[0]
     k_att, k_agg = jax.random.split(key)
-    if K == 1:
-        v = tilde_v
-    else:
-        tilde_v = agg_lib.attack_stacked(fed.attack, tilde_v, byz_mask,
-                                         k_att)
-        agg = _resolve("aggregator", fed.aggregator, K=K, n_byz=fed.n_byz,
-                       sharded=sharded)
-        v = jnp.broadcast_to(agg(tilde_v, k_agg)[None], state.theta.shape)
+    with obs.named_phase("fed.aggregate", fed.telemetry):
+        if K == 1:
+            v = tilde_v
+        else:
+            tilde_v = agg_lib.attack_stacked(fed.attack, tilde_v, byz_mask,
+                                             k_att)
+            agg = _resolve("aggregator", fed.aggregator, K=K,
+                           n_byz=fed.n_byz, sharded=sharded)
+            v = jnp.broadcast_to(agg(tilde_v, k_agg)[None],
+                                 state.theta.shape)
 
     opt = get_optimizer(fed.optimizer, fed.lr, maximize=False)
     new_theta, new_opt = jax.vmap(opt.update)(v, state.opt_state,
                                               state.theta)
     mix_dtype = jnp.bfloat16 if fed.mix_dtype == "bfloat16" else None
-    new_theta = agg_lib.gda_agree(new_theta, fed.kappa, fed.alpha_bar,
-                                  mix_dtype=mix_dtype, block=fed.mix_block)
+    with obs.named_phase("fed.agree", fed.telemetry):
+        new_theta = agg_lib.gda_agree(new_theta, fed.kappa, fed.alpha_bar,
+                                      mix_dtype=mix_dtype,
+                                      block=fed.mix_block)
     metrics = {
         "loss": jnp.mean(jnp.where(byz_mask, 0.0, losses))
         * K / jnp.maximum(jnp.sum(~byz_mask), 1),
         "diameter": (jnp.zeros(()) if K == 1 else jnp.sqrt(jnp.max(
             agg_lib.stacked_sq_dists(new_theta)))),
     }
+    if fed.telemetry:
+        norms = jnp.linalg.norm(tilde_v, axis=1)
+        metrics["grad_norm"] = jnp.sum(jnp.where(byz_mask, 0.0, norms)) \
+            / jnp.maximum(jnp.sum(~byz_mask), 1)
+        # the flat (K, D) stack is what the suspicion scores operate on —
+        # the tree-shaped trainer has no rejected-mask plane
+        metrics["rejected"] = (jnp.zeros((K,), bool) if K == 1 else
+                               rejection_mask(fed.aggregator, tilde_v,
+                                              fed.n_byz))
+        obs.tap("fed", step=state.step, loss=metrics["loss"],
+                diameter=metrics["diameter"],
+                grad_norm=metrics["grad_norm"],
+                rejected=metrics["rejected"])
     return FlatFedState(new_theta, state.theta, v, new_opt,
                         state.step + 1), metrics
 

@@ -36,6 +36,7 @@ returns the same dispatching callable as :func:`get_kernel` and
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import os
 from typing import Callable, Dict, Optional
@@ -48,6 +49,23 @@ BACKENDS = ("pallas", "pallas-interpret", "jnp")
 _GLOBAL_BACKEND: Optional[str] = None
 
 _KERNELS: Dict[str, "Kernel"] = {}
+
+#: backend-selection tally keyed ``(kernel_name, backend, reason)`` with
+#: reason in {"call", "global", "env", "auto", "auto_jnp_below"} — one
+#: increment per trace-time dispatch decision, so a silent
+#: ``auto_jnp_below`` fallback shows up here (and in the obs manifest)
+#: instead of only as a 2x bench miss. Always on: selection happens at
+#: trace time, never inside a compiled program.
+_DISPATCH_COUNTS: collections.Counter = collections.Counter()
+
+
+def dispatch_counts() -> Dict[tuple, int]:
+    """Snapshot of the backend-selection tally (see above)."""
+    return dict(_DISPATCH_COUNTS)
+
+
+def reset_dispatch_counts() -> None:
+    _DISPATCH_COUNTS.clear()
 
 
 def _check_backend(backend: str) -> str:
@@ -133,17 +151,21 @@ class Kernel:
         reading the first operand's static element count.
         """
         if backend:
-            return _check_backend(backend)
+            return self._tally(_check_backend(backend), "call")
         if _GLOBAL_BACKEND:
-            return _GLOBAL_BACKEND
+            return self._tally(_GLOBAL_BACKEND, "global")
         if os.environ.get("REPRO_KERNEL_BACKEND"):
-            return default_backend()
+            return self._tally(default_backend(), "env")
         b = default_backend()
         if b == "pallas" and self.auto_jnp_below and args:
             size = getattr(args[0], "size", None)
             if size is not None and size < self.auto_jnp_below:
-                return "jnp"
-        return b
+                return self._tally("jnp", "auto_jnp_below")
+        return self._tally(b, "auto")
+
+    def _tally(self, backend: str, reason: str) -> str:
+        _DISPATCH_COUNTS[(self.name, backend, reason)] += 1
+        return backend
 
     def __call__(self, *args, backend: Optional[str] = None, **kwargs):
         return self.impl(self.resolve_backend(*args, backend=backend)

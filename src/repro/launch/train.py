@@ -14,10 +14,18 @@ CPU-runnable with ``--reduced`` (the 2-layer family variant); on a real
 cluster drop ``--reduced`` and launch one process per host with the
 production mesh.
 
+Telemetry (DESIGN.md §8): ``--telemetry-out DIR`` turns on the obs layer —
+``fed.telemetry=True`` in-step taps streamed to ``DIR/metrics.jsonl`` plus
+a ``DIR/manifest.json`` run manifest; ``--profile`` additionally writes a
+Chrome-trace ``DIR/trace.json`` (Perfetto/chrome://tracing-loadable) of
+the host-side window spans and engine compiles.
+
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
       --agents 4 --steps 30 --byz 1 --attack large_noise
 """
 import argparse
+import contextlib
+import os
 import time
 
 import numpy as np
@@ -25,6 +33,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.checkpoint import save
 from repro.configs.base import get_config, reduced
 from repro.core import engine
@@ -63,7 +72,17 @@ def main() -> None:
                     help="steps fused into one scanned device program")
     ap.add_argument("--no-fused", action="store_true",
                     help="legacy per-step dispatch (two compiled programs)")
+    ap.add_argument("--telemetry-out", default=None, metavar="DIR",
+                    help="enable telemetry; write metrics.jsonl + "
+                         "manifest.json (and trace.json with --profile) "
+                         "under DIR")
+    ap.add_argument("--profile", action="store_true",
+                    help="host span tracing -> Chrome-trace trace.json "
+                         "(implies telemetry; default DIR: telemetry/)")
     args = ap.parse_args()
+
+    out_dir = args.telemetry_out or ("telemetry" if args.profile else None)
+    telemetry_on = out_dir is not None
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -73,7 +92,8 @@ def main() -> None:
     fed = FedConfig(aggregator=args.aggregator, kappa=args.kappa,
                     n_byz=args.byz, attack=args.attack, lr=args.lr,
                     optimizer=args.optimizer,
-                    page_p=args.page_p, seed=args.seed)
+                    page_p=args.page_p, seed=args.seed,
+                    telemetry=telemetry_on)
     K = args.agents
     key = jax.random.PRNGKey(args.seed)
     state = init_fed_state(cfg, fed, K, key)
@@ -85,50 +105,76 @@ def main() -> None:
         d_model=cfg.d_model, seed=args.seed))
     byz_mask = jnp.asarray(np.arange(K) < args.byz)
 
-    print(f"arch={cfg.name} K={K} byz={args.byz} attack={fed.attack} "
-          f"agg={fed.aggregator} opt={fed.optimizer} kappa={args.kappa} "
-          f"mode={'legacy' if args.no_fused else 'fused'}")
+    if telemetry_on:
+        os.makedirs(out_dir, exist_ok=True)
+        obs.get_tracer().clear()
+        tele = obs.telemetry(
+            obs.JsonlSink(os.path.join(out_dir, "metrics.jsonl")))
+    else:
+        tele = contextlib.nullcontext()
+
+    obs.progress(
+        f"arch={cfg.name} K={K} byz={args.byz} attack={fed.attack} "
+        f"agg={fed.aggregator} opt={fed.optimizer} kappa={args.kappa} "
+        f"mode={'legacy' if args.no_fused else 'fused'}")
     t0 = time.time()
 
     def report(step_i, coin, metrics):
-        print(f"step {step_i:4d} c={int(coin)} "
-              f"loss={float(metrics['loss']):.4f} "
-              f"diam={float(metrics['diameter']):.3e} "
-              f"({time.time() - t0:.1f}s)", flush=True)
+        obs.progress(f"step {step_i:4d} c={int(coin)} "
+                     f"loss={float(metrics['loss']):.4f} "
+                     f"diam={float(metrics['diameter']):.3e} "
+                     f"({time.time() - t0:.1f}s)", step=step_i)
 
-    if args.no_fused:
-        steps = {True: jax.jit(lambda s, b, m, k: fed_train_step(
-                     cfg, fed, s, b, m, k, large=True)),
-                 False: jax.jit(lambda s, b, m, k: fed_train_step(
-                     cfg, fed, s, b, m, k, large=False))}
-        for step_i in range(args.steps):
-            c = common_sample_coin(step_i, args.seed, fed.page_p)
-            key, k_step = jax.random.split(key)
-            state, metrics = steps[c](state, pipe.batch(step_i), byz_mask,
-                                      k_step)
-            if step_i % max(args.steps // 10, 1) == 0 \
-                    or step_i == args.steps - 1:
-                report(step_i, c, metrics)
-    else:
-        wstep = jax.jit(
-            lambda s, b, ts, k: fed_train_window(cfg, fed, s, b, byz_mask,
-                                                 ts, k),
-            donate_argnums=engine.donate_args(0))
-        key, k_loop = jax.random.split(key)
-        n_windows = -(-args.steps // args.window)
-        report_every = max(n_windows // 10, 1)
-        for w_i, w0 in enumerate(range(0, args.steps, args.window)):
-            ts = np.arange(w0, min(w0 + args.window, args.steps))
-            batches = _stack_batches([pipe.batch(int(t)) for t in ts])
-            state, metrics = wstep(state, batches, jnp.asarray(ts), k_loop)
-            if w_i % report_every == 0 or w_i == n_windows - 1:
-                last = jax.tree.map(lambda m: m[-1], metrics)
-                report(int(ts[-1]), bool(np.asarray(metrics["coin"][-1])),
-                       last)
+    with tele:
+        if args.no_fused:
+            steps = {True: jax.jit(lambda s, b, m, k: fed_train_step(
+                         cfg, fed, s, b, m, k, large=True)),
+                     False: jax.jit(lambda s, b, m, k: fed_train_step(
+                         cfg, fed, s, b, m, k, large=False))}
+            for step_i in range(args.steps):
+                c = common_sample_coin(step_i, args.seed, fed.page_p)
+                key, k_step = jax.random.split(key)
+                with obs.host_span("train.step", step=step_i, coin=int(c)):
+                    state, metrics = steps[c](state, pipe.batch(step_i),
+                                              byz_mask, k_step)
+                if step_i % max(args.steps // 10, 1) == 0 \
+                        or step_i == args.steps - 1:
+                    report(step_i, c, metrics)
+        else:
+            wstep = jax.jit(
+                lambda s, b, ts, k: fed_train_window(cfg, fed, s, b,
+                                                     byz_mask, ts, k),
+                donate_argnums=engine.donate_args(0))
+            key, k_loop = jax.random.split(key)
+            n_windows = -(-args.steps // args.window)
+            report_every = max(n_windows // 10, 1)
+            for w_i, w0 in enumerate(range(0, args.steps, args.window)):
+                ts = np.arange(w0, min(w0 + args.window, args.steps))
+                batches = _stack_batches([pipe.batch(int(t)) for t in ts])
+                with obs.host_span("train.window", window=w_i,
+                                   steps=len(ts)):
+                    state, metrics = jax.block_until_ready(
+                        wstep(state, batches, jnp.asarray(ts), k_loop))
+                if w_i % report_every == 0 or w_i == n_windows - 1:
+                    last = jax.tree.map(lambda m: m[-1], metrics)
+                    report(int(ts[-1]),
+                           bool(np.asarray(metrics["coin"][-1])), last)
 
-    if args.ckpt:
-        save(jax.tree.map(lambda l: l[0], state.params), args.ckpt)
-        print(f"saved honest-agent-0 params to {args.ckpt}")
+        if args.ckpt:
+            save(jax.tree.map(lambda l: l[0], state.params), args.ckpt)
+            obs.progress(f"saved honest-agent-0 params to {args.ckpt}")
+
+        if telemetry_on:
+            obs.write_manifest(
+                os.path.join(out_dir, "manifest.json"),
+                extra={"arch": cfg.name, "K": K, "n_byz": args.byz,
+                       "attack": str(fed.attack),
+                       "aggregator": str(fed.aggregator),
+                       "steps": args.steps, "window": args.window,
+                       "mode": "legacy" if args.no_fused else "fused"})
+            if args.profile:
+                obs.write_trace(os.path.join(out_dir, "trace.json"))
+            obs.progress(f"telemetry written to {out_dir}/")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,43 @@
+"""repro.obs — zero-overhead-off telemetry (DESIGN.md §8).
+
+Three planes:
+
+* **In-loop metric taps** (:mod:`repro.obs.metrics`): fused loops built
+  with a static ``cfg.telemetry=True`` stream per-iteration scalars and
+  small vectors (honest gradient norm, agreement diameter Δ₂, per-round
+  rejected-agent masks) through ``jax.debug.callback`` into host ring
+  buffers and attached sinks. Off (the default) the compiled program is
+  the exact seed program.
+* **Span tracing** (:mod:`repro.obs.trace`): ``jax.named_scope`` phase
+  names inside telemetry-enabled programs, plus a host Chrome-trace
+  tracer around engine compiles/dispatches (Perfetto-loadable;
+  ``--profile`` on ``repro.launch.train``).
+* **Sinks + manifest** (:mod:`repro.obs.sinks` /
+  :mod:`repro.obs.manifest`): JSONL / in-memory / stdout-progress sinks
+  and a per-run manifest including the kernel backend-dispatch counters.
+
+Typical use::
+
+    from repro import obs
+    with obs.telemetry(obs.JsonlSink("metrics.jsonl")):
+        out = run_decbyzpg(env, dataclasses.replace(cfg, telemetry=True), T)
+    print(out["aggregator_confusion"]["recall"])
+"""
+from repro.obs.manifest import build_manifest, write_manifest
+from repro.obs.metrics import (RingBuffer, Recorder, capture,
+                               confusion_tally, disable, enable, enabled,
+                               get_recorder, progress, record, tap,
+                               telemetry)
+from repro.obs.sinks import (JsonlSink, MemorySink, Sink,
+                             StdoutProgressSink)
+from repro.obs.trace import (Tracer, get_tracer, host_instant, host_span,
+                             named_phase, write_trace)
+
+__all__ = [
+    "RingBuffer", "Recorder", "Sink", "MemorySink", "JsonlSink",
+    "StdoutProgressSink", "Tracer",
+    "enabled", "enable", "disable", "telemetry", "capture",
+    "get_recorder", "record", "progress", "tap", "confusion_tally",
+    "named_phase", "host_span", "host_instant", "get_tracer",
+    "write_trace", "build_manifest", "write_manifest",
+]

@@ -112,6 +112,60 @@ def test_engine_sweep_rows_gated(tmp_path):
     assert main(argv) == 0
 
 
+def _obs_doc(rows, key_fields=("name", "env", "K", "T")):
+    return {"bench": "obs", "smoke": False,
+            "key_fields": list(key_fields), "rows": rows}
+
+
+def test_key_fields_fallback_gates_unknown_schema(tmp_path):
+    """A doc outside the hard-coded schemas gates via its declared
+    ``key_fields`` row identity (the bench_obs schema)."""
+    base = _obs_doc([
+        {"name": "fused_off", "env": "cartpole(horizon=20)", "K": 3,
+         "T": 5, "us_per_call": 1000.0},
+        {"name": "fused_off", "env": "cartpole(horizon=100)", "K": 13,
+         "T": 10, "us_per_call": 3e4},
+    ])
+    cur_ok = _obs_doc([
+        {"name": "fused_off", "env": "cartpole(horizon=20)", "K": 3,
+         "T": 5, "us_per_call": 1500.0}])
+    argv = ["--pair", f"{_write(tmp_path, 'c.json', cur_ok)}:"
+            f"{_write(tmp_path, 'b.json', base)}"]
+    assert main(argv) == 0
+    cur_bad = _obs_doc([
+        {"name": "fused_off", "env": "cartpole(horizon=20)", "K": 3,
+         "T": 5, "us_per_call": 2500.0}])              # 2.5x
+    argv = ["--pair", f"{_write(tmp_path, 'c2.json', cur_bad)}:"
+            f"{_write(tmp_path, 'b.json', base)}"]
+    assert main(argv) == 1
+    # a differently-sized row never aliases a baseline point
+    cur_other = _obs_doc([
+        {"name": "fused_off", "env": "cartpole(horizon=20)", "K": 5,
+         "T": 5, "us_per_call": 1e9}])
+    argv = ["--pair", f"{_write(tmp_path, 'c3.json', cur_other)}:"
+            f"{_write(tmp_path, 'b.json', base)}"]
+    assert main(argv) == 0
+
+
+def test_key_fields_doc_level_fallback_and_unknown_still_skipped(tmp_path):
+    """key_fields values fall back to doc-level fields (the old
+    BENCH_topology layout); docs with neither a known schema nor
+    key_fields never gate."""
+    base = {"bench": "custom", "key_fields": ["case", "K"], "K": 8,
+            "rows": [{"case": "a", "us_per_call": 1000.0}]}
+    cur = {"bench": "custom", "key_fields": ["case", "K"], "K": 8,
+           "rows": [{"case": "a", "us_per_call": 9000.0}]}     # 9x
+    argv = ["--pair", f"{_write(tmp_path, 'c.json', cur)}:"
+            f"{_write(tmp_path, 'b.json', base)}"]
+    assert main(argv) == 1
+    # same rows, no key_fields declaration: unknown schema, never gates
+    for d in (base, cur):
+        d.pop("key_fields")
+    argv = ["--pair", f"{_write(tmp_path, 'c2.json', cur)}:"
+            f"{_write(tmp_path, 'b2.json', base)}"]
+    assert main(argv) == 0
+
+
 def test_pair_argument_validation(tmp_path):
     with pytest.raises(SystemExit):
         main([])

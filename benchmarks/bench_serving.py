@@ -1,0 +1,136 @@
+"""Serving benchmark: continuous-batching decode latency + throughput.
+
+Serves a reproducible simulated request stream (fixed seed, Poisson
+arrivals) against a reduced transformer policy through the
+``repro.serving`` engine and reports, per (slots, n_requests, max_new)
+point:
+
+* ``decode_tick`` — warm jitted tick wall time (``us_per_call``, gated:
+  this is the hot loop; a de-jit or a per-request recompile shows up
+  here as an order-of-magnitude jump);
+* ``latency_p50`` / ``latency_p99`` — per-request end-to-end latency
+  over the offline deterministic replay (``us_per_call``, gated);
+* ``throughput`` — aggregate tokens/sec (informational: wall-clock
+  throughput of the host loop is scheduler-noise-sensitive at smoke
+  sizes, so it never gates).
+
+Rows land in ``benchmarks/BENCH_serving.json`` (full run, committed) /
+``BENCH_serving_smoke.json`` (CI artifact); ``check_regress.py`` gates
+the smoke rows against the committed baseline via the generic
+``key_fields`` identity.
+
+  PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
+"""
+import argparse
+import json
+import os
+import time
+
+import jax
+
+N_REP = 5
+HERE = os.path.dirname(__file__)
+
+# (slots, n_requests, max_new); first entry is the smoke point
+SIZES = (
+    (2, 8, 6),
+    (4, 32, 16),
+    (8, 64, 16),
+)
+
+_POLICY = ("transformer(arch='llama3.2-1b', n_layers=2, d_model=64, "
+           "n_heads=2)")
+_ENV = "cartpole(horizon=32)"
+
+
+def _build(slots, max_new):
+    from repro.core.registry import resolve
+    from repro.rl.envs import make_env
+    from repro.serving import PolicyServer, engine_for_policy
+
+    env = make_env(_ENV)
+    policy = resolve("policy", _POLICY, env=env)
+    params = policy.init(jax.random.PRNGKey(0))
+    engine = engine_for_policy(policy, params, slots=slots,
+                               max_new=max_new, max_prompt=8)
+    return env, engine, PolicyServer(engine)    # warmup compiles programs
+
+
+def measure(slots: int, n_requests: int, max_new: int,
+            jsonl_path=None) -> list:
+    import contextlib
+
+    from repro import obs
+    from repro.serving import make_traffic
+
+    env, engine, server = _build(slots, max_new)
+
+    # warm tick latency on a fully-occupied state
+    sched = server.scheduler
+    traffic = make_traffic(slots, seed=1, rate_rps=1e6, max_new=max_new,
+                           obs_dim=env.obs_dim, jitter_budget=False)
+    for req in traffic:
+        sched.admit(req)
+    sched.tick()                                  # warm
+    t0 = time.perf_counter()
+    for _ in range(N_REP):
+        sched.tick()
+    tick_us = (time.perf_counter() - t0) * 1e6 / N_REP
+    sched.drain()
+
+    # offline replay for latency percentiles + throughput; the smoke run
+    # streams the per-request records + gauges to a JSONL CI artifact
+    stream = make_traffic(n_requests, seed=7, rate_rps=200.0,
+                          max_new=max_new, obs_dim=env.obs_dim)
+    sink = obs.telemetry(obs.JsonlSink(jsonl_path)) if jsonl_path \
+        else contextlib.nullcontext()
+    with sink:
+        report = server.run_offline(stream)
+    s = report.summary()
+
+    shared = {"slots": slots, "n_requests": n_requests, "max_new": max_new}
+    obs.progress(f"bench_serving slots={slots} n={n_requests} "
+                 f"gen={max_new}: tick={tick_us:.0f}us "
+                 f"p50={s['latency_p50_ms']}ms p99={s['latency_p99_ms']}ms "
+                 f"{s['tokens_per_s']} tok/s")
+    return [
+        {"name": "decode_tick", "us_per_call": tick_us, **shared},
+        {"name": "latency_p50", "us_per_call": s["latency_p50_ms"] * 1e3,
+         **shared},
+        {"name": "latency_p99", "us_per_call": s["latency_p99_ms"] * 1e3,
+         **shared},
+        # wall-clock throughput of the host loop: informational only
+        {"name": "throughput", "tokens_per_s": s["tokens_per_s"],
+         "total_tokens": s["total_tokens"], **shared},
+    ]
+
+
+def run(smoke: bool = False) -> dict:
+    from repro import obs
+    rows = []
+    jsonl = os.path.join(HERE, "TELEMETRY_serving_smoke.jsonl") if smoke \
+        else None
+    for slots, n_requests, max_new in (SIZES[:1] if smoke else SIZES):
+        rows += measure(slots, n_requests, max_new, jsonl_path=jsonl)
+    doc = {"bench": "serving", "backend": jax.default_backend(),
+           "smoke": smoke,
+           "key_fields": ["name", "slots", "n_requests", "max_new"],
+           "rows": rows}
+    name = "BENCH_serving_smoke.json" if smoke else "BENCH_serving.json"
+    path = os.path.join(HERE, name)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    obs.progress(f"# wrote {path}")
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI run (smoke point only)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

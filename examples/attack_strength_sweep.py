@@ -16,9 +16,9 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro import obs
+from repro import Experiment, obs
 from repro.core import engine
-from repro.core.engine import Experiment
+
 
 
 def main():

@@ -10,8 +10,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro import obs
-from repro.core.engine import Experiment
+from repro import Experiment, obs
 
 
 def main():

@@ -43,7 +43,7 @@ def main():
     import numpy as np
     from jax.sharding import Mesh
 
-    from repro.configs.base import get_config, reduced
+    from repro import get_config, reduced
     from repro.data.pipeline import DataConfig, TokenPipeline
     from repro.distributed.fed_trainer import (
         FedConfig, common_sample_coin, fed_train_step, fed_train_step_flat,

@@ -13,8 +13,7 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro import obs
-from repro.core.engine import Experiment
+from repro import Experiment, obs
 
 
 def main():

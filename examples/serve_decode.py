@@ -1,59 +1,75 @@
-"""Batched serving demo: prefill + greedy decode with ring KV cache,
-including the sliding-window long-context mode (long_500k analogue).
+"""Continuous-batching serving demo: the aggregated transformer policy
+behind the `repro.serving` engine, driven by simulated user traffic.
 
-  PYTHONPATH=src python examples/serve_decode.py --arch llama3.2-1b
+32+ requests arrive staggered (Poisson at --rate req/s); the fixed-slot
+engine prefills each into a free slot, decodes all occupied slots in one
+jitted step per tick, and recycles slots as budgets complete.  Per-request
+latency records and queue-depth/slot-occupancy gauges stream through
+`repro.obs`; the summary reports p50/p99 latency and aggregate tokens/sec.
+
+  PYTHONPATH=src python examples/serve_decode.py --requests 32 --slots 4
 """
 import argparse
 import sys
-import time
 
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 
-from repro import obs
-from repro.configs.base import get_config, reduced
-from repro.models.model import decode_step, init_params, prefill
+from repro import make_env, obs, resolve
+from repro.serving import PolicyServer, engine_for_policy, make_traffic
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=48)
-    ap.add_argument("--gen", type=int, default=24)
-    ap.add_argument("--window", type=int, default=0,
-                    help=">0: sliding-window ring cache of this size")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="mean request arrival rate (req/s)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--offline", action="store_true",
+                    help="virtual-clock replay (deterministic; no "
+                         "queueing delay in the latencies)")
     args = ap.parse_args()
 
-    cfg = reduced(get_config(args.arch))
-    key = jax.random.PRNGKey(0)
-    params = init_params(cfg, key)
-    B, S = args.batch, args.prompt_len
-    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
-    pe = None
-    if cfg.frontend != "none":
-        pe = jax.random.normal(key, (B, cfg.n_prefix_embeds, cfg.d_model))
-    W = args.window or (S + cfg.n_prefix_embeds + args.gen)
-    window = args.window or None
+    env = make_env("cartpole(horizon=32)")
+    policy = resolve(
+        "policy",
+        f"transformer(arch='{args.arch}', n_layers=2, d_model=64, "
+        f"n_heads=2)", env=env)
 
-    pf = jax.jit(lambda p, t, e: prefill(cfg, p, t, e, cache_len=W,
-                                         window=window))
-    dc = jax.jit(lambda p, t, c: decode_step(cfg, p, t, c))
-    logits, cache = pf(params, toks, pe)
-    tok = jnp.argmax(logits[:, -1], -1)
-    outs = [tok]
-    t0 = time.time()
-    for _ in range(args.gen - 1):
-        logits, cache = dc(params, tok, cache)
-        tok = jnp.argmax(logits[:, 0], -1)
-        outs.append(tok)
-    jax.block_until_ready(tok)
-    dt = (time.time() - t0) / max(args.gen - 1, 1)
-    obs.progress(f"{cfg.name} cache_len={W} window={window}: "
-                 f"{dt*1e3:.2f} ms/token on CPU")
-    obs.progress(f"generated: {[int(x) for x in jnp.stack(outs, 1)[0][:16]]}")
+    # one root key, split per consumer: init here, traffic obs vectors are
+    # host-side numpy (traffic.py) and never touch the jax key stream
+    key_init, _key_spare = jax.random.split(jax.random.PRNGKey(args.seed))
+    params = policy.init(key_init)
+
+    engine = engine_for_policy(policy, params, slots=args.slots,
+                               max_new=args.max_new, max_prompt=8)
+    server = PolicyServer(engine)           # warmup compiles all programs
+    traffic = make_traffic(args.requests, seed=args.seed,
+                           rate_rps=args.rate, max_new=args.max_new,
+                           obs_dim=env.obs_dim)
+
+    with obs.telemetry() as rec:
+        report = server.run_offline(traffic) if args.offline \
+            else server.run(traffic)
+        n_records = len(rec.stream("serve.request"))
+        peak_busy = max((r["slots_busy"] for r in rec.stream("serve.gauge")),
+                        default=0)
+
+    s = report.summary()
+    obs.progress(f"{args.requests} requests on {args.slots} slots "
+                 f"({'offline' if args.offline else 'realtime'}): "
+                 f"p50={s['latency_p50_ms']}ms p99={s['latency_p99_ms']}ms "
+                 f"ttft_p50={s['ttft_p50_ms']}ms "
+                 f"{s['tokens_per_s']} tok/s "
+                 f"({s['total_tokens']} tokens in {s['wall_s']}s)")
+    obs.progress(f"telemetry: {n_records} serve.request records, "
+                 f"peak occupancy {peak_busy}/{args.slots} slots")
+    for r in report.results[:4]:
+        obs.progress(f"  uid={r.uid}: {r.tokens}")
 
 
 if __name__ == "__main__":

@@ -16,8 +16,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro import obs
-from repro.core.engine import Experiment
+from repro import Experiment, obs
 from repro.topology import resolve_topology
 
 TOPOLOGIES = ("complete", "ring(k=4)", "small_world(k=4, beta=0.3)",

@@ -1,0 +1,65 @@
+"""repro — Byzantine fault-tolerant decentralized federated policy
+gradient (arXiv 2401.03489 reproduction) on jax.
+
+This module is the deliberate public surface.  Everything here resolves
+lazily (PEP 562): ``import repro`` costs one dict, and each name pulls
+in only its own submodule on first touch — so ``repro.obs`` never drags
+the training stack in, and leaf modules keep importing their own
+internals without cycles.
+
+Stable entry points:
+
+* ``repro.Experiment`` / ``repro.ScenarioGrid`` / ``repro.run_grid`` —
+  configure and run the paper's experiments
+* ``repro.register`` / ``repro.resolve`` / ``repro.REGISTRY`` — the
+  spec-string registry (aggregators, attacks, envs, policies, ...)
+* ``repro.save`` / ``repro.restore`` — checkpoint pytrees
+* ``repro.serve`` — continuous-batching decode of the aggregated policy
+* ``repro.obs`` / ``repro.serving`` / ``repro.core`` — the subsystem
+  namespaces themselves
+
+Anything not exported here is internal: examples and downstream code
+should not deep-import paths like ``repro.core.engine`` for names this
+surface already provides (``repro.analysis`` lints exactly that).
+"""
+import importlib
+
+#: name -> defining submodule (attribute re-exports)
+_EXPORTS = {
+    "Experiment": "repro.core.engine",
+    "ExperimentResult": "repro.core.engine",
+    "Scenario": "repro.core.engine",
+    "ScenarioGrid": "repro.core.engine",
+    "run_grid": "repro.core.engine",
+    "REGISTRY": "repro.core.registry",
+    "Spec": "repro.core.registry",
+    "SpecError": "repro.core.registry",
+    "register": "repro.core.registry",
+    "resolve": "repro.core.registry",
+    "get_config": "repro.configs.base",
+    "reduced": "repro.configs.base",
+    "make_env": "repro.rl.envs",
+    "save": "repro.checkpoint",
+    "restore": "repro.checkpoint",
+    "serve": "repro.serving",
+}
+
+#: subsystem namespaces exposed as attributes (lazy submodule imports)
+_MODULES = ("analysis", "checkpoint", "configs", "core", "data",
+            "distributed", "kernels", "launch", "models", "obs", "optim",
+            "rl", "serving", "topology")
+
+__all__ = sorted(_EXPORTS) + sorted(_MODULES)
+
+
+def __getattr__(name):
+    module = _EXPORTS.get(name)
+    if module is not None:
+        return getattr(importlib.import_module(module), name)
+    if name in _MODULES:
+        return importlib.import_module(f"repro.{name}")
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return __all__

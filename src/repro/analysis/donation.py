@@ -17,7 +17,9 @@ and checks, per site:
 
 Sites: the fused algo loops (``fused_decbyzpg``/``fused_byzpg``), the
 fused federated window (``launch/train.py``), the sharded federated step
-(``make_fed_step``) and the serving decode step (``make_serve_fns``).
+(``make_fed_step``), the serving decode step (``make_serve_fns``) and the
+continuous-batching engine's tick/insert programs
+(``repro.serving.engine``).
 """
 
 from __future__ import annotations
@@ -182,10 +184,35 @@ def _serving_site():
     cfg = reduced(get_config("llama3_2_1b"))
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     key = jax.ShapeDtypeStruct((2,), jnp.uint32)
-    _, _, specs = make_serve_fns(cfg, mesh, batch=2, seq_len=32, key=key)
+    fns = make_serve_fns(cfg, mesh, batch=2, seq_len=32, key=key)
     tok = jax.ShapeDtypeStruct((2, 1), jnp.int32)
     fn = lambda p, t, c: decode_step(cfg, p, t, c)
-    return fn, (specs["params_shape"], tok, specs["cache_shape"])
+    return fn, (fns.params_shape, tok, fns.cache_shape)
+
+
+def _slot_engine():
+    from repro.configs import get_config, reduced
+    from repro.models.model import init_params
+    from repro.serving.engine import DecodeEngine
+    cfg = reduced(get_config("llama3_2_1b"))
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params = jax.eval_shape(lambda k: init_params(cfg, k), key)
+    engine = DecodeEngine(cfg, None, slots=2, max_new=4, max_prompt=4)
+    state = jax.eval_shape(engine.init_state)
+    return cfg, engine, params, state
+
+
+def _serving_tick_site():
+    cfg, engine, params, state = _slot_engine()
+    return engine._tick_impl, (params, state)
+
+
+def _serving_insert_site():
+    from repro.models.model import init_cache
+    cfg, engine, params, state = _slot_engine()
+    row = jax.eval_shape(lambda: init_cache(cfg, 1, engine.cache_len))
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+    return engine._insert_impl, (state, i32, row, i32, i32, i32)
 
 
 def sites() -> list:
@@ -203,6 +230,10 @@ def sites() -> list:
              (0,), _fed_step_site, r"donate_argnums=\(0,\)"),
         Site("serving_decode", "src/repro/distributed/serving.py", (2,),
              _serving_site, r"donate_argnums=\(2,\)"),
+        Site("serving_tick", "src/repro/serving/engine.py", (1,),
+             _serving_tick_site, r"donate_argnums=donate_args\(1\)"),
+        Site("serving_insert", "src/repro/serving/engine.py", (0,),
+             _serving_insert_site, r"donate_argnums=donate_args\(0\)"),
     ]
 
 

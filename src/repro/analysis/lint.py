@@ -21,6 +21,11 @@ fenced ``python`` block in README.md / DESIGN.md) once into a
   ``# analysis: host-side``.
 * ``tracked-smoke-file`` — no ``benchmarks/*_smoke.json`` committed to
   git (smoke outputs are per-run CI artifacts, not baselines).
+* ``deep-import`` — examples must not deep-import names the public
+  surface (``repro/__init__._EXPORTS``) already re-exports: examples are
+  the API's showroom, and ``from repro.core.engine import Experiment``
+  there teaches users a private path.  Escape hatch:
+  ``# analysis: deep-import``.
 """
 
 from __future__ import annotations
@@ -346,6 +351,45 @@ class NumpyInTracedScope(Rule):
 
 
 # ---------------------------------------------------------------------------
+# deep-import
+# ---------------------------------------------------------------------------
+
+
+class DeepImport(Rule):
+    name = "deep-import"
+
+    def wants(self, ctx, cfg):
+        return not ctx.is_doc_fence and ctx.rel.startswith("examples/")
+
+    @staticmethod
+    def _public_names() -> dict:
+        """name -> defining submodule, from the public surface itself (so
+        this rule can never drift from ``repro/__init__``)."""
+        import repro
+        return dict(repro._EXPORTS)
+
+    def visit(self, ctx, cfg):
+        public = self._public_names()
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ImportFrom) or node.level:
+                continue
+            mod = node.module or ""
+            if not mod.startswith("repro."):
+                continue
+            if ctx.has_hatch(node, "deep-import"):
+                continue
+            covered = [a.name for a in node.names if a.name in public]
+            if covered:
+                yield self.finding(
+                    ctx, node,
+                    f"deep import from {mod!r} of public name(s) "
+                    f"{covered} — examples should use the public surface "
+                    f"(from repro import {', '.join(covered)}); mark a "
+                    f"deliberate internal demo with "
+                    f"'# analysis: deep-import'")
+
+
+# ---------------------------------------------------------------------------
 # tracked-smoke-file (repo-level, no AST)
 # ---------------------------------------------------------------------------
 
@@ -373,7 +417,7 @@ def check_tracked_smoke(cfg: LintConfig) -> list:
 # ---------------------------------------------------------------------------
 
 RULES = (LiteralPRNGKey(), SpecStrings(), PallasLocation(),
-         NumpyInTracedScope())
+         NumpyInTracedScope(), DeepImport())
 
 _FENCE_RE = re.compile(r"^```(\w*)\s*$")
 

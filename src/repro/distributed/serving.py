@@ -4,8 +4,17 @@ decode shapes lower ``decode_step`` — one new token against a KV/state
 cache of ``seq_len``; ``long_500k`` allocates a sliding-window ring of
 ``cfg.long_context_window`` instead (sub-quadratic + sub-linear memory),
 and recurrent families carry O(1) state.
+
+This module also carries the slot-granular cache ops used by the
+continuous-batching engine (``repro.serving``): inserting one request's
+prefilled ring into a slot of a per-slot cache, and evicting a finished
+slot (DESIGN.md §11).
 """
 from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -26,12 +35,48 @@ def serve_cache_len(cfg: ModelConfig, seq_len: int) -> int:
     return seq_len
 
 
-def make_serve_fns(cfg: ModelConfig, mesh, batch: int, seq_len: int,
-                   dtype=jnp.float32, *, key=None):
-    """Returns (prefill_jit, decode_jit, specs) with mesh shardings.
+@dataclasses.dataclass(frozen=True)
+class ServeFns:
+    """The typed return of :func:`make_serve_fns`.
 
-    prefill(params, tokens[, prefix_embeds]) -> (logits, cache)
-    decode(params, token, cache) -> (logits, cache)
+    * ``prefill(params, tokens[, prefix_embeds]) -> (logits, cache)``
+    * ``decode(params, token, cache) -> (logits, cache)``
+    * ``shardings`` — ``NamedSharding`` trees for ``params`` / ``cache``
+      plus the batch ``PartitionSpec``
+    * ``cache_shape`` / ``params_shape`` — ``ShapeDtypeStruct`` trees
+
+    One release of tuple-compatibility: unpacking as the historical
+    ``(prefill, decode, specs)`` triple still works but warns — move to
+    attribute access.
+    """
+    prefill: Callable
+    decode: Callable
+    shardings: dict
+    cache_shape: Any
+    params_shape: Any
+    batch_spec: Any
+
+    @property
+    def specs(self) -> dict:
+        """The legacy specs dict of the ``(fn, fn, dict)`` era."""
+        return {"params": self.shardings["params"],
+                "cache": self.shardings["cache"],
+                "cache_shape": self.cache_shape,
+                "params_shape": self.params_shape,
+                "batch_spec": self.batch_spec}
+
+    def __iter__(self):
+        warnings.warn(
+            "unpacking make_serve_fns() as a (prefill, decode, specs) "
+            "tuple is deprecated — use the ServeFns fields "
+            "(.prefill/.decode/.shardings/.cache_shape/.params_shape)",
+            DeprecationWarning, stacklevel=2)
+        return iter((self.prefill, self.decode, self.specs))
+
+
+def make_serve_fns(cfg: ModelConfig, mesh, batch: int, seq_len: int,
+                   dtype=jnp.float32, *, key=None) -> ServeFns:
+    """Build mesh-sharded prefill/decode programs as a :class:`ServeFns`.
 
     ``key`` shapes the parameter tree (it is only ever consumed under
     ``jax.eval_shape``): pass the caller's init key — or a
@@ -77,6 +122,41 @@ def make_serve_fns(cfg: ModelConfig, mesh, batch: int, seq_len: int,
         in_shardings=(psh, NamedSharding(mesh, b_spec), c_sh),
         out_shardings=(NamedSharding(mesh, b_spec), c_sh),
         donate_argnums=(2,))
-    return prefill_jit, decode_jit, {
-        "params": psh, "cache": c_sh, "cache_shape": cache_shape,
-        "params_shape": params_shape, "batch_spec": b_spec}
+    return ServeFns(
+        prefill=prefill_jit, decode=decode_jit,
+        shardings={"params": psh, "cache": c_sh, "batch_spec": b_spec},
+        cache_shape=cache_shape, params_shape=params_shape,
+        batch_spec=b_spec)
+
+
+# ---------------------------------------------------------------------------
+# Slot-granular cache ops (continuous batching, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def slot_cache_insert(cache, row, slot, true_len):
+    """Insert a batch-1 prefill cache ``row`` into ``slot`` of a per-slot
+    cache (:func:`repro.models.model.init_slot_cache` layout).
+
+    ``true_len`` is the number of *real* prompt positions (prefix embeds
+    included); ring entries holding positions ``>= true_len`` — prompt
+    padding written by a bucketed prefill — are marked empty, so padded
+    keys can never be attended to.  ``slot`` and ``true_len`` may be
+    traced scalars: one compiled insert program serves every slot and
+    every prompt length.
+    """
+    sp = jnp.where((row["slot_pos"] >= 0) & (row["slot_pos"] < true_len),
+                   row["slot_pos"], -1)
+    blocks = jax.tree.map(lambda c, r: c.at[:, slot].set(r[:, 0]),
+                          cache["blocks"], row["blocks"])
+    return {"pos": cache["pos"].at[slot].set(true_len),
+            "slot_pos": cache["slot_pos"].at[slot].set(sp),
+            "blocks": blocks}
+
+
+def slot_cache_evict(cache, slot):
+    """Clear one slot: empty ring (``slot_pos = -1``), position 0.  Block
+    contents are left in place — they are unreachable through the empty
+    ring and the next :func:`slot_cache_insert` overwrites them."""
+    return {"pos": cache["pos"].at[slot].set(0),
+            "slot_pos": cache["slot_pos"].at[slot].set(-1),
+            "blocks": cache["blocks"]}

@@ -53,22 +53,21 @@ def build_lowered(arch: str, shape_name: str, mesh, fed: FedConfig,
         return step.lower(state_shape, batch, mask, key_struct), cfg, shape
 
     B = shape.global_batch
-    prefill_jit, decode_jit, specs = make_serve_fns(
-        cfg, mesh, B, shape.seq_len, dtype=dtype, key=key_struct)
-    params_shape = specs["params_shape"]
+    fns = make_serve_fns(cfg, mesh, B, shape.seq_len, dtype=dtype,
+                         key=key_struct)
+    params_shape = fns.params_shape
     if shape.mode == "prefill":
         S_text = shape.seq_len - cfg.n_prefix_embeds
         toks = jax.ShapeDtypeStruct((B, S_text), jnp.int32)
         if cfg.frontend != "none":
             pe = jax.ShapeDtypeStruct((B, cfg.n_prefix_embeds, cfg.d_model),
                                       dtype)
-            return prefill_jit.lower(params_shape, toks, pe), cfg, shape
-        return prefill_jit.lower(params_shape, toks), cfg, shape
+            return fns.prefill.lower(params_shape, toks, pe), cfg, shape
+        return fns.prefill.lower(params_shape, toks), cfg, shape
 
     # decode: ONE new token against a cache of seq_len (ring for long ctx)
-    cache_shape = specs["cache_shape"]
     tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
-    return decode_jit.lower(params_shape, tok, cache_shape), cfg, shape
+    return fns.decode.lower(params_shape, tok, fns.cache_shape), cfg, shape
 
 
 def run_one(arch: str, shape_name: str, multi_pod: bool,

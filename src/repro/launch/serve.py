@@ -1,62 +1,79 @@
-"""Serving driver: batched prefill + greedy decode (deliverable (b)).
+"""Serving driver: continuous-batching decode CLI (deliverable (b)).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
-      --batch 4 --prompt-len 32 --gen 16
+Two modes share the `repro.serving` engine:
+
+* **LM traffic** (default) — any registered arch (reduced or full),
+  token-prompt requests over its vocab:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
+        --reduced --requests 32 --slots 4 --gen 16
+
+* **policy traffic** (``--policy``) — the aggregated transformer policy
+  via the ``repro.serving.serve`` front door (observation requests
+  through the prefix-embedding frontend):
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --policy "transformer(arch='llama3.2-1b', n_layers=2, \
+d_model=64, n_heads=2)" --checkpoint results/policy.npz
 """
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import get_config, reduced
-from repro.models.model import decode_step, init_params, prefill
+from repro.models.model import init_params
+from repro.serving import DecodeEngine, PolicyServer, make_traffic, serve
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--policy", default=None,
+                    help="policy spec string — serve observation traffic "
+                         "through repro.serving.serve instead of LM "
+                         "token traffic")
+    ap.add_argument("--env", default="cartpole(horizon=32)")
+    ap.add_argument("--checkpoint", default=None,
+                    help="aggregated-policy checkpoint (policy mode)")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=100.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--offline", action="store_true")
     args = ap.parse_args()
+
+    if args.policy is not None:
+        kw = {"checkpoint": args.checkpoint} if args.checkpoint else \
+            {"key": jax.random.PRNGKey(args.seed)}
+        report = serve(policy=args.policy, env=args.env,
+                       n_requests=args.requests, rate_rps=args.rate,
+                       slots=args.slots, max_new=args.gen,
+                       seed=args.seed, realtime=not args.offline, **kw)
+        obs.progress("policy serve", **report.summary())
+        return
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = init_params(cfg, key)
-    B, S = args.batch, args.prompt_len
-    prompts = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
-    pe = None
-    if cfg.frontend != "none":
-        pe = jax.random.normal(key, (B, cfg.n_prefix_embeds, cfg.d_model))
-
-    cache_len = S + cfg.n_prefix_embeds + args.gen
-    prefill_jit = jax.jit(lambda p, t, e: prefill(
-        cfg, p, t, e, cache_len=cache_len))
-    decode_jit = jax.jit(lambda p, t, c: decode_step(cfg, p, t, c))
-
-    t0 = time.time()
-    logits, cache = prefill_jit(params, prompts, pe)
-    tok = jnp.argmax(logits[:, -1], axis=-1)
-    t_prefill = time.time() - t0
-    out = [tok]
-    t0 = time.time()
-    for _ in range(args.gen - 1):
-        logits, cache = decode_jit(params, tok, cache)
-        tok = jnp.argmax(logits[:, 0], axis=-1)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-    gen = jnp.stack(out, axis=1)
-    print(f"arch={cfg.name} batch={B} prompt={S} gen={args.gen}")
-    print(f"prefill: {t_prefill*1e3:.1f} ms   decode: "
-          f"{t_decode / max(args.gen - 1, 1) * 1e3:.2f} ms/token")
-    for b in range(min(B, 2)):
-        print(f"  seq{b}: {list(map(int, gen[b][:12]))}")
+    key_init, _ = jax.random.split(jax.random.PRNGKey(args.seed))
+    params = init_params(cfg, key_init)
+    engine = DecodeEngine(cfg, params, slots=args.slots, max_new=args.gen,
+                          max_prompt=args.prompt_len)
+    server = PolicyServer(engine)
+    traffic = make_traffic(
+        args.requests, seed=args.seed, rate_rps=args.rate,
+        max_new=args.gen, vocab=cfg.vocab_size,
+        prompt_lens=tuple(p for p in (1, 4, 8, args.prompt_len)
+                          if p <= args.prompt_len))
+    report = server.run_offline(traffic) if args.offline \
+        else server.run(traffic)
+    obs.progress(f"lm serve arch={cfg.name}", **report.summary())
+    for r in report.results[:2]:
+        obs.progress(f"  uid={r.uid}: {r.tokens[:12]}")
 
 
 if __name__ == "__main__":

@@ -334,6 +334,43 @@ def decode_step(cfg: ModelConfig, params, token, cache):
 
 
 # ---------------------------------------------------------------------------
+# Per-slot decode (continuous-batching serving)
+# ---------------------------------------------------------------------------
+
+def init_slot_cache(cfg: ModelConfig, slots: int, cache_len: int,
+                    dtype=jnp.float32):
+    """Empty per-slot decode cache: like :func:`init_cache` but every batch
+    row is an independent serving slot with its own write position —
+    ``pos`` is ``(slots,)`` and ``slot_pos`` is ``(slots, cache_len)``.
+    All slots start empty (``slot_pos = -1``)."""
+    cache = init_cache(cfg, slots, cache_len, dtype)
+    return {"pos": jnp.zeros((slots,), jnp.int32),
+            "slot_pos": jnp.full((slots, cache_len), -1, jnp.int32),
+            "blocks": cache["blocks"]}
+
+
+def decode_step_slots(cfg: ModelConfig, params, tokens, cache):
+    """One decode step over a per-slot cache (:func:`init_slot_cache`).
+
+    ``tokens``: ``(slots,)`` int32 — each slot advances at its *own*
+    position; rows are vmapped through :func:`decode_step` so a slot's
+    logits depend only on its own ring contents (the batching-invariance
+    contract the serving tests pin). Returns ``(logits (slots, V),
+    new cache)``."""
+    def one(tok, pos, slot_pos, blocks):
+        row = {"pos": pos, "slot_pos": slot_pos,
+               "blocks": jax.tree.map(lambda x: x[:, None], blocks)}
+        logits, new = decode_step(cfg, params, tok[None], row)
+        return (logits[0, 0], new["pos"], new["slot_pos"],
+                jax.tree.map(lambda x: x[:, 0], new["blocks"]))
+
+    logits, pos, slot_pos, blocks = jax.vmap(
+        one, in_axes=(0, 0, 0, 1), out_axes=(0, 0, 0, 1))(
+            tokens, cache["pos"], cache["slot_pos"], cache["blocks"])
+    return logits, {"pos": pos, "slot_pos": slot_pos, "blocks": blocks}
+
+
+# ---------------------------------------------------------------------------
 # Loss
 # ---------------------------------------------------------------------------
 

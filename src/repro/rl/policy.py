@@ -25,9 +25,18 @@ class Policy(NamedTuple):
     ``logits`` is either an activation name (str — run the MLP stack) or a
     callable ``(params, obs) -> logits`` (arbitrary models; obs may carry
     leading batch dims).
+
+    ``model_cfg``/``n_actions`` mark a policy as *servable*: when the
+    logits model is a ``repro/models`` architecture, the attached
+    :class:`~repro.configs.base.ModelConfig` lets ``repro.serving`` build
+    a decode engine for it (``n_actions`` restricts the greedy head to
+    the action logits).  MLP policies leave both ``None`` — they have no
+    token stream to decode.
     """
     init: Callable
     logits: object
+    model_cfg: object = None
+    n_actions: object = None
 
 
 def policy_logits(params, obs, logits="tanh"):

@@ -85,4 +85,5 @@ def _transformer_policy_factory(env, arch: str = "qwen2.5-3b",
                                remat=remat)
         return logits[:, -1, :n_actions].reshape((*lead, n_actions))
 
-    return Policy(init=lambda key: init_params(cfg, key), logits=logits_fn)
+    return Policy(init=lambda key: init_params(cfg, key), logits=logits_fn,
+                  model_cfg=cfg, n_actions=n_actions)

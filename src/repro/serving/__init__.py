@@ -1,0 +1,106 @@
+"""Serving subsystem: continuous-batching robust policy decode.
+
+The front door is :func:`serve` — load the *aggregated* federated policy
+(the artifact the Byzantine-robust training loop agrees on), build a
+fixed-slot continuous-batching decode engine for its transformer, and
+serve a stream of simulated per-user requests:
+
+    from repro import serving
+    report = serving.serve(
+        policy="transformer(arch='llama3.2-1b', n_layers=2, d_model=64, "
+               "n_heads=2)",
+        env="cartpole(horizon=32)",
+        checkpoint="results/policy.npz", n_requests=32, slots=4)
+    print(report.summary())
+
+Layers (each importable on its own):
+
+* :mod:`repro.serving.request` — request/result types + thread-safe queue
+* :mod:`repro.serving.engine` — jitted slot state, tick/insert/prefill
+* :mod:`repro.serving.scheduler` — slot lifecycle bookkeeping
+* :mod:`repro.serving.server` — offline/realtime loops + obs telemetry
+* :mod:`repro.serving.traffic` — simulated Poisson request streams
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.serving.engine import (DecodeEngine, SlotState, TickOut,
+                                  default_buckets, engine_for_policy)
+from repro.serving.request import Request, RequestQueue, RequestResult
+from repro.serving.scheduler import SlotScheduler
+from repro.serving.server import PolicyServer, ServeReport
+from repro.serving.traffic import make_traffic
+
+__all__ = ["DecodeEngine", "SlotState", "TickOut", "default_buckets",
+           "engine_for_policy", "Request", "RequestQueue", "RequestResult",
+           "SlotScheduler", "PolicyServer", "ServeReport", "make_traffic",
+           "serve", "policy_params"]
+
+
+def policy_params(policy, *, checkpoint: Optional[str] = None, theta=None,
+                  key=None):
+    """Materialize servable params for a resolved policy.
+
+    Precedence: ``checkpoint`` (a ``repro.checkpoint`` archive of the
+    param pytree — the aggregated artifact the trainer saves) >
+    ``theta`` (a flat aggregated policy vector, unraveled through the
+    policy's own template) > ``key`` (fresh init — caller supplies the
+    key; nothing here manufactures PRNG state)."""
+    import jax
+    import jax.numpy as jnp
+
+    if checkpoint is not None:
+        from repro.checkpoint import restore
+        template = jax.eval_shape(
+            policy.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return restore(template, checkpoint)
+    if theta is not None:
+        from repro.rl.policy import policy_unraveler
+        unravel, d = policy_unraveler(policy)
+        theta = jnp.asarray(theta)
+        if theta.shape != (d,):
+            raise ValueError(f"theta has shape {theta.shape}, policy "
+                             f"expects ({d},)")
+        return unravel(theta)
+    if key is not None:
+        return policy.init(key)
+    raise ValueError("no parameter source: pass checkpoint=, theta= or "
+                     "key= (serving never invents PRNG state)")
+
+
+def serve(policy: str = "transformer(arch='llama3.2-1b', n_layers=2, "
+                        "d_model=64, n_heads=2)",
+          env: str = "cartpole(horizon=32)", *,
+          checkpoint: Optional[str] = None, theta=None, key=None,
+          params=None, n_requests: int = 32, rate_rps: float = 50.0,
+          slots: int = 4, max_new: int = 16, max_prompt: int = 8,
+          seed: int = 0, realtime: bool = True, warmup: bool = True,
+          **engine_kw) -> ServeReport:
+    """Serve simulated policy traffic against the aggregated model.
+
+    ``policy``/``env`` are registry spec strings (the same ``policy=``
+    the training configs take); the policy must be servable (attached
+    ``model_cfg`` — i.e. a transformer policy).  Parameters come from
+    ``params`` directly or :func:`policy_params` (checkpoint > theta >
+    key).  ``realtime`` replays Poisson arrivals at ``rate_rps`` against
+    the wall clock through the feeder thread; off, the offline
+    deterministic loop runs the same continuous-batching schedule on a
+    virtual clock."""
+    from repro.core.registry import resolve
+    from repro.rl.envs import make_env
+
+    e = make_env(env) if isinstance(env, str) else env
+    pol = resolve("policy", policy, env=e) if isinstance(policy, str) \
+        else policy
+    if params is None:
+        params = policy_params(pol, checkpoint=checkpoint, theta=theta,
+                               key=key)
+    engine = engine_for_policy(pol, params, slots=slots, max_new=max_new,
+                               max_prompt=max_prompt, **engine_kw)
+    server = PolicyServer(engine, warmup=warmup)
+    traffic = make_traffic(n_requests, seed=seed, rate_rps=rate_rps,
+                           max_new=max_new, obs_dim=e.obs_dim)
+    if realtime:
+        return server.run(traffic)
+    return server.run_offline(traffic)

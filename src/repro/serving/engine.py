@@ -1,0 +1,297 @@
+"""Continuous-batching decode engine (maxtext offline-inference style).
+
+One fixed-slot jitted decode state is stepped by a single compiled
+``tick`` per scheduler round:
+
+* the **state** (:class:`SlotState`) is a pytree carrying the per-slot
+  ring KV cache (``models.init_slot_cache`` — every slot has its own
+  write position), the per-slot current token / generated-count / budget
+  vectors, and an active mask;
+* **tick** runs ``decode_step_slots`` over all slots — active or not —
+  so the program shape never depends on occupancy, takes the greedy
+  next token per slot, and retires slots whose budget is exhausted;
+* **insert** writes one request's prefilled batch-1 ring into a free
+  slot (``distributed.serving.slot_cache_insert``); slot index, true
+  prompt length and budget are traced scalars, so one compiled insert
+  program serves every slot and prompt length;
+* **prefill** is compiled once per prompt-length *bucket*: prompts are
+  right-padded up to the bucket, causality keeps the real positions
+  exact, the padded ring entries are invalidated on insert, and the
+  first token is read at the true last position.
+
+Exactly three program families exist (prefill-per-bucket, insert, tick);
+after :meth:`DecodeEngine.warmup` a request stream triggers zero XLA
+compiles (pinned by ``tests/test_serving.py`` with the PR-7
+``CompileLog``).  Decode is greedy by design: the served policy is the
+*agreed* aggregated model, so identical requests must yield identical
+tokens on every replica (the batching-invariance contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import donate_args
+from repro.distributed.serving import slot_cache_evict, slot_cache_insert
+from repro.models.model import decode_step_slots, init_slot_cache, prefill
+from repro.serving.request import Request
+
+#: BOS anchor supplied when a request carries only an observation
+BOS_ID = 0
+
+
+class SlotState(NamedTuple):
+    """The jitted decode state: one pytree, one device round-trip per
+    tick."""
+    cache: dict          # per-slot ring cache (models.init_slot_cache)
+    tokens: jnp.ndarray  # (S,) int32 — token to feed each slot next
+    steps: jnp.ndarray   # (S,) int32 — tokens generated so far
+    budget: jnp.ndarray  # (S,) int32 — max_new per slot
+    active: jnp.ndarray  # (S,) bool
+
+
+class TickOut(NamedTuple):
+    """Host view of one tick: per-slot emissions."""
+    tokens: np.ndarray   # (S,) next token per slot (frozen where inactive)
+    done: np.ndarray     # (S,) bool — slot retired this tick
+    active: np.ndarray   # (S,) bool — slot was active entering the tick
+
+
+def default_buckets(max_prompt: int) -> Tuple[int, ...]:
+    """Power-of-two prompt-length buckets covering [1, max_prompt]."""
+    out = []
+    b = 1
+    while b < max_prompt:
+        out.append(b)
+        b *= 2
+    out.append(max_prompt)
+    return tuple(dict.fromkeys(out))
+
+
+class DecodeEngine:
+    """Fixed-slot continuous-batching greedy decoder for one model.
+
+    ``n_logits`` restricts the greedy argmax to the first ``n_logits``
+    vocabulary entries — the action head of a transformer *policy*
+    (``rl.transformer_policy``), whose logits are the leading
+    ``env.n_actions`` entries of the LM head.
+
+    Recurrent families (``ssm`` / ``hybrid``) cannot be prompt-padded —
+    state pollution from pad steps is not maskable after the fact — so
+    their buckets degenerate to exact prompt lengths (one prefill
+    compile per distinct length; attention families pay one per bucket).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_new: int = 32, max_prompt: int = 64,
+                 prompt_buckets: Optional[Tuple[int, ...]] = None,
+                 n_logits: Optional[int] = None, dtype=jnp.float32):
+        if slots < 1:
+            raise ValueError(f"need at least one slot, got {slots}")
+        self.cfg = cfg
+        self.params = params
+        self.slots = int(slots)
+        self.max_new = int(max_new)
+        self.max_prompt = int(max_prompt)
+        self.n_logits = None if n_logits is None else int(n_logits)
+        self.dtype = dtype
+        self.has_pe = cfg.frontend != "none"
+        self._pad_ok = cfg.family not in ("ssm", "hybrid")
+        if prompt_buckets is None:
+            prompt_buckets = default_buckets(max_prompt) if self._pad_ok \
+                else ()
+        self.prompt_buckets = tuple(sorted(prompt_buckets))
+        #: ring size: longest padded prompt + full generation budget
+        self.cache_len = (cfg.n_prefix_embeds
+                          + (max(self.prompt_buckets)
+                             if self.prompt_buckets else max_prompt)
+                          + max_new)
+
+        self._tick_jit = jax.jit(self._tick_impl,
+                                 donate_argnums=donate_args(1))
+        self._insert_jit = jax.jit(self._insert_impl,
+                                   donate_argnums=donate_args(0))
+        self._evict_jit = jax.jit(self._evict_impl,
+                                  donate_argnums=donate_args(0))
+        self._prefill_jit: dict = {}     # bucket len -> compiled prefill
+
+    # -- state ------------------------------------------------------------
+
+    def init_state(self) -> SlotState:
+        S = self.slots
+        return SlotState(
+            cache=init_slot_cache(self.cfg, S, self.cache_len, self.dtype),
+            tokens=jnp.zeros((S,), jnp.int32),
+            steps=jnp.zeros((S,), jnp.int32),
+            budget=jnp.zeros((S,), jnp.int32),
+            active=jnp.zeros((S,), jnp.bool_))
+
+    def update_params(self, params) -> None:
+        """Hot-swap the served policy (e.g. a fresh aggregated model from
+        the federated trainer) — params are a traced argument of every
+        program, so no recompilation."""
+        self.params = params
+
+    # -- traced programs --------------------------------------------------
+
+    def _greedy(self, logits):
+        if self.n_logits is not None:
+            logits = logits[..., :self.n_logits]
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def _tick_impl(self, params, state: SlotState):
+        logits, cache = decode_step_slots(self.cfg, params, state.tokens,
+                                          state.cache)
+        nxt = self._greedy(logits)
+        nxt = jnp.where(state.active, nxt, state.tokens)
+        steps = state.steps + state.active
+        done = state.active & (steps >= state.budget)
+        new = SlotState(cache=cache, tokens=nxt, steps=steps,
+                        budget=state.budget, active=state.active & ~done)
+        return new, nxt, done, state.active
+
+    def _insert_impl(self, state: SlotState, slot, row_cache, first_tok,
+                     true_len, budget):
+        cache = slot_cache_insert(state.cache, row_cache, slot, true_len)
+        return SlotState(
+            cache=cache,
+            tokens=state.tokens.at[slot].set(first_tok),
+            steps=state.steps.at[slot].set(1),
+            budget=state.budget.at[slot].set(budget),
+            active=state.active.at[slot].set(True))
+
+    def _evict_impl(self, state: SlotState, slot):
+        return SlotState(cache=slot_cache_evict(state.cache, slot),
+                         tokens=state.tokens, steps=state.steps,
+                         budget=state.budget,
+                         active=state.active.at[slot].set(False))
+
+    def _prefill_for(self, padded_len: int):
+        fn = self._prefill_jit.get(padded_len)
+        if fn is not None:
+            return fn
+        cfg, W = self.cfg, self.cache_len
+
+        def pf_pe(params, toks, pe, true_total):
+            logits, cache = prefill(cfg, params, toks, pe, cache_len=W,
+                                    last_only=False)
+            first = self._greedy(logits[0, true_total - 1])
+            return first, cache
+
+        def pf(params, toks, true_total):
+            logits, cache = prefill(cfg, params, toks, None, cache_len=W,
+                                    last_only=False)
+            first = self._greedy(logits[0, true_total - 1])
+            return first, cache
+
+        fn = jax.jit(pf_pe if self.has_pe else pf)
+        self._prefill_jit[padded_len] = fn
+        return fn
+
+    # -- host API ---------------------------------------------------------
+
+    def bucket_for(self, prompt_len: int) -> int:
+        """Padded token length for a prompt of ``prompt_len`` tokens."""
+        if prompt_len > self.max_prompt:
+            raise ValueError(f"prompt of {prompt_len} tokens exceeds "
+                             f"max_prompt={self.max_prompt}")
+        if not self._pad_ok:
+            return prompt_len          # recurrent state: no padding
+        for b in self.prompt_buckets:
+            if prompt_len <= b:
+                return b
+        return prompt_len
+
+    def _prompt(self, req: Request):
+        toks = req.tokens if req.tokens is not None \
+            else np.asarray([BOS_ID], np.int32)
+        if req.obs is not None and not self.has_pe:
+            raise ValueError(f"request {req.uid} carries an observation "
+                             f"but {self.cfg.name} has no prefix-embedding "
+                             f"frontend")
+        P = len(toks)
+        padded = self.bucket_for(P)
+        toks = np.pad(toks, (0, padded - P))[None]        # (1, padded)
+        pe = None
+        if self.has_pe:
+            pe = np.zeros((1, self.cfg.n_prefix_embeds, self.cfg.d_model),
+                          np.float32)
+            if req.obs is not None:
+                pe[0, 0, :req.obs.shape[0]] = req.obs
+        true_total = self.cfg.n_prefix_embeds + P
+        return toks, pe, true_total, padded
+
+    def prefill_request(self, req: Request):
+        """Run one request's prompt. Returns ``(first_token int,
+        row_cache, true_total)`` — the insert-ready batch-1 ring."""
+        toks, pe, true_total, padded = self._prompt(req)
+        pf = self._prefill_for(padded)
+        if self.has_pe:
+            first, row = pf(self.params, toks, pe, true_total)
+        else:
+            first, row = pf(self.params, toks, true_total)
+        return int(first), row, true_total
+
+    def insert(self, state: SlotState, slot: int, row_cache, first_tok,
+               true_total: int, max_new: int) -> SlotState:
+        if max_new > self.max_new:
+            raise ValueError(f"max_new={max_new} exceeds engine budget "
+                             f"{self.max_new}")
+        return self._insert_jit(state, slot, row_cache, first_tok,
+                                true_total, max_new)
+
+    def evict(self, state: SlotState, slot: int) -> SlotState:
+        """Cancel a slot mid-flight (finished slots retire themselves in
+        the tick — this is for cancellations/resets)."""
+        return self._evict_jit(state, slot)
+
+    def tick(self, state: SlotState):
+        """One decode step for every slot. Returns ``(state, TickOut)``."""
+        state, nxt, done, active = self._tick_jit(self.params, state)
+        return state, TickOut(tokens=np.asarray(nxt),
+                              done=np.asarray(done),
+                              active=np.asarray(active))
+
+    def warmup(self, buckets: Optional[Tuple[int, ...]] = None) -> int:
+        """Compile every program family against a scratch state: one
+        prefill per bucket, the shared insert, the tick, the evict.
+        Returns the number of programs warmed."""
+        state = self.init_state()
+        if buckets is None:
+            buckets = self.prompt_buckets or (min(1, self.max_prompt) or 1,)
+        n = 0
+        for b in buckets:
+            req = Request(uid=-1, max_new=2,
+                          tokens=np.zeros((min(b, self.max_prompt),),
+                                          np.int32),
+                          obs=(np.zeros((1,), np.float32)
+                               if self.has_pe else None))
+            first, row, true_total = self.prefill_request(req)
+            state = self.insert(state, 0, row, first, true_total, 2)
+            n += 1
+        state, _ = self.tick(state)
+        state = self.evict(state, 0)
+        return n + 3
+
+
+def engine_for_policy(policy, params=None, **kw) -> DecodeEngine:
+    """Build a :class:`DecodeEngine` serving a resolved servable policy
+    (one with ``model_cfg``, e.g. ``policy="transformer(...)"``), with
+    the greedy head restricted to the policy's action logits."""
+    model_cfg = getattr(policy, "model_cfg", None)
+    if model_cfg is None:
+        raise ValueError("policy is not servable: no model_cfg attached "
+                         "(only transformer policies decode; 'mlp' has no "
+                         "token stream)")
+    kw.setdefault("n_logits", getattr(policy, "n_actions", None))
+    return DecodeEngine(model_cfg, params, **kw)
+
+
+def _unused():       # pragma: no cover — keeps dataclasses import honest
+    return dataclasses.MISSING

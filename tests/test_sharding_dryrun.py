@@ -76,9 +76,9 @@ for arch in ["llama3_2_1b", "deepseek_v2_lite_16b"]:
     mask = jax.ShapeDtypeStruct((K,), jnp.bool_)
     compiled = step.lower(state_shape, batch, mask, key).compile()
     assert compiled.cost_analysis()["flops"] > 0
-    pf, dc, specs = make_serve_fns(cfg, mesh, batch=4, seq_len=64, key=key)
+    fns = make_serve_fns(cfg, mesh, batch=4, seq_len=64, key=key)
     tok = jax.ShapeDtypeStruct((4, 1), jnp.int32)
-    dc.lower(specs["params_shape"], tok, specs["cache_shape"]).compile()
+    fns.decode.lower(fns.params_shape, tok, fns.cache_shape).compile()
     print(arch, "COMPILE_OK")
 """
     out = _run_subprocess(code)

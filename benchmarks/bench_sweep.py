@@ -1,0 +1,155 @@
+"""Sweep-service benchmark (DESIGN.md §12): what windowing costs and
+what resuming saves.
+
+Rows land in ``benchmarks/BENCH_sweep.json`` (``--smoke`` writes the
+untracked ``BENCH_sweep_smoke.json`` at the smallest point only):
+
+* ``sweep_oneshot`` — warm one-shot ``run_grid`` over the grid, the
+  baseline the windowed path is measured against (``us_per_call`` =
+  warm wall / W, so the two gated rows share units);
+* ``sweep_windowed`` — warm ``SweepRunner`` pass over the same grid in
+  W windows, all in memory: ``us_per_call`` is wall per window (gated),
+  ``overhead_vs_oneshot`` the windowed/one-shot wall ratio, and
+  ``wall_us_per_window_cold`` the compile-inclusive cold pass
+  (recorded, ungated — compile time is machine/XLA-version noise at 2×);
+* ``sweep_persisted`` — the same run writing carries + chunks + state
+  through the sweep directory every window: ``us_per_call`` per window
+  including the atomic checkpoint writes (gated; the delta vs
+  ``sweep_windowed`` is the persistence tax);
+* ``sweep_resume_reload`` — ``SweepRunner.resume().run()`` over the
+  completed directory: pure manifest + npz reload, zero compiles
+  (asserted), ``us_per_call`` per window reloaded.
+
+  PYTHONPATH=src python -m benchmarks.bench_sweep [--smoke]
+"""
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import jax
+
+from repro import obs
+
+SEEDS = (0, 1)
+ETAS = (1e-3, 5e-3, 1e-2, 2e-2)
+
+# (env_spec, T, W, base config kwargs); the first entry is the smoke point
+SWEEP_SIZES = (
+    ("cartpole(horizon=20)", 6, 3,
+     dict(K=3, n_byz=1, attack="large_noise(sigma=10)", N=4, B=2, kappa=2,
+          hidden=(8,))),
+    ("cartpole(horizon=100)", 20, 4,
+     dict(K=13, n_byz=3, attack="large_noise(sigma=10)", N=20, B=4,
+          kappa=4, hidden=(16, 16))),
+)
+
+
+def _row(name, us, derived=""):
+    obs.progress(f"{name},{us:.1f},{derived}")
+
+
+def measure(env_spec: str, T: int, W: int, base: dict) -> list:
+    from repro.core import engine
+    from repro.core.engine import ScenarioGrid, run_grid
+    from repro.rl.envs import make_env
+    from repro.sweep import SweepRunner
+
+    env = make_env(env_spec)
+    axes = {"eta": ETAS}
+    L, S = len(ETAS), len(SEEDS)
+    shared = {"env": env_spec, "K": base["K"], "T": T, "L": L, "S": S,
+              "W": W}
+    rows = []
+
+    def runner(out_dir=None, windows=W):
+        return SweepRunner(algo="decbyzpg", env=env_spec, T=T,
+                           seeds=SEEDS, axes=axes, windows=windows,
+                           out_dir=out_dir, **base)
+
+    # one-shot baseline (warm)
+    grid = ScenarioGrid(seeds=SEEDS, axes=axes)
+    run_grid(env, grid, T, algo="decbyzpg", **base)
+    t0 = time.perf_counter()
+    run_grid(env, grid, T, algo="decbyzpg", **base)
+    oneshot = time.perf_counter() - t0
+    rows.append({"name": "sweep_oneshot",
+                 "us_per_call": oneshot * 1e6 / W, **shared})
+    _row(f"sweep_oneshot_K{base['K']}_T{T}", oneshot * 1e6 / W,
+         f"wall_us={oneshot * 1e6:.0f}")
+
+    # windowed, in memory: cold (compile-inclusive, ungated) then warm
+    engine.clear_cache()
+    t0 = time.perf_counter()
+    runner().run()
+    cold = time.perf_counter() - t0
+    compiles = engine.compile_count()
+    t0 = time.perf_counter()
+    runner().run()
+    warm = time.perf_counter() - t0
+    rows.append({"name": "sweep_windowed",
+                 "us_per_call": warm * 1e6 / W,
+                 "wall_us_per_window_cold": cold * 1e6 / W,
+                 "compiles": compiles,
+                 "overhead_vs_oneshot": warm / oneshot, **shared})
+    _row(f"sweep_windowed_K{base['K']}_T{T}", warm * 1e6 / W,
+         f"W={W};compiles={compiles};"
+         f"overhead_vs_oneshot={warm / oneshot:.2f}x")
+
+    with tempfile.TemporaryDirectory() as tmp:
+        out = os.path.join(tmp, "sweep")
+        t0 = time.perf_counter()
+        runner(out_dir=out).run()
+        persisted = time.perf_counter() - t0
+        rows.append({"name": "sweep_persisted",
+                     "us_per_call": persisted * 1e6 / W,
+                     "persistence_tax_vs_windowed": persisted / warm,
+                     **shared})
+        _row(f"sweep_persisted_K{base['K']}_T{T}", persisted * 1e6 / W,
+             f"tax_vs_windowed={persisted / warm:.2f}x")
+
+        engine.clear_cache()
+        t0 = time.perf_counter()
+        SweepRunner.resume(out).run()
+        reload_ = time.perf_counter() - t0
+        assert engine.compile_count() == 0      # pure reload, no engine
+        rows.append({"name": "sweep_resume_reload",
+                     "us_per_call": reload_ * 1e6 / W,
+                     "speedup_vs_persisted": persisted / reload_,
+                     **shared})
+        _row(f"sweep_resume_reload_K{base['K']}_T{T}", reload_ * 1e6 / W,
+             f"speedup_vs_persisted={persisted / reload_:.1f}x;"
+             f"compiles=0")
+    return rows
+
+
+def run(smoke: bool = False) -> dict:
+    obs.progress("name,us_per_call,derived")
+    rows = []
+    for env_spec, T, W, base in (SWEEP_SIZES[:1] if smoke
+                                 else SWEEP_SIZES):
+        rows += measure(env_spec, T, W, base)
+    doc = {"bench": "sweep", "backend": jax.default_backend(),
+           "smoke": smoke, "etas": list(ETAS), "seeds": list(SEEDS),
+           # check_regress.py keys rows through this declaration
+           "key_fields": ["name", "env", "K", "T", "L", "S", "W"],
+           "rows": rows}
+    name = "BENCH_sweep_smoke.json" if smoke else "BENCH_sweep.json"
+    path = os.path.join(os.path.dirname(__file__), name)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    obs.progress(f"# wrote {path}")
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI run (smallest point only)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ Stable entry points:
 * ``repro.register`` / ``repro.resolve`` / ``repro.REGISTRY`` — the
   spec-string registry (aggregators, attacks, envs, policies, ...)
 * ``repro.save`` / ``repro.restore`` — checkpoint pytrees
+* ``repro.SweepRunner`` — windowed, resumable, multi-host sweeps
 * ``repro.serve`` — continuous-batching decode of the aggregated policy
 * ``repro.obs`` / ``repro.serving`` / ``repro.core`` — the subsystem
   namespaces themselves
@@ -42,12 +43,13 @@ _EXPORTS = {
     "save": "repro.checkpoint",
     "restore": "repro.checkpoint",
     "serve": "repro.serving",
+    "SweepRunner": "repro.sweep",
 }
 
 #: subsystem namespaces exposed as attributes (lazy submodule imports)
 _MODULES = ("analysis", "checkpoint", "configs", "core", "data",
             "distributed", "kernels", "launch", "models", "obs", "optim",
-            "rl", "serving", "topology")
+            "rl", "serving", "sweep", "topology")
 
 __all__ = sorted(_EXPORTS) + sorted(_MODULES)
 

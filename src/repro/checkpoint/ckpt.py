@@ -1,5 +1,11 @@
 """Minimal dependency-free checkpointing: pytree -> npz (+ tree structure
-by key-path), with exact-structure restore."""
+by key-path), with validated-structure restore.
+
+Writes are atomic (temp sibling + ``os.replace``) so a crash mid-write
+never leaves a torn file — the sweep service (DESIGN.md §12) resumes
+from whatever its manifest last committed, and a half-written carry
+would otherwise poison the resume.
+"""
 from __future__ import annotations
 
 import os
@@ -10,31 +16,66 @@ import jax
 import jax.numpy as jnp
 
 
+def _key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "name", getattr(
+        p, "idx", p)))) for p in path)
+
+
 def _flatten(tree):
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    out = {}
-    for path, leaf in flat:
-        key = "/".join(str(getattr(p, "key", getattr(p, "name", getattr(
-            p, "idx", p)))) for p in path)
-        out[key] = np.asarray(leaf)
-    return out
+    return {_key(path): np.asarray(leaf) for path, leaf in flat}
+
+
+def _npz(path: str) -> str:
+    return path if path.endswith(".npz") else path + ".npz"
 
 
 def save(tree, path: str) -> None:
+    path = _npz(path)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez(path, **_flatten(tree))
+    tmp = path + f".tmp-{os.getpid()}.npz"
+    try:
+        np.savez(tmp, **_flatten(tree))
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
 
 
-def restore(template, path: str):
-    """Restore into the structure of ``template`` (shape/dtype checked)."""
-    data = np.load(path if path.endswith(".npz") else path + ".npz")
-    flat = jax.tree_util.tree_flatten_with_path(template)
-    leaves = []
-    for p, leaf in flat[0]:
-        key = "/".join(str(getattr(q, "key", getattr(q, "name", getattr(
-            q, "idx", q)))) for q in p)
-        arr = data[key]
-        if arr.shape != leaf.shape:
-            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
-        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
-    return jax.tree_util.tree_unflatten(flat[1], leaves)
+def restore(template, path: str, cast_dtypes: bool = False):
+    """Restore into the structure of ``template`` (real arrays or
+    ``ShapeDtypeStruct`` leaves, e.g. from ``jax.eval_shape``).
+
+    Structure, shape, and dtype are validated *by key path* before any
+    unflattening, so a mismatched checkpoint raises one ``ValueError``
+    naming every offending field (keys missing from the file, keys the
+    template lacks, per-leaf shape/dtype deltas) instead of failing deep
+    inside ``tree_unflatten``.  ``cast_dtypes=True`` allows
+    dtype-changing loads (e.g. an f32 file into a bf16 template) — still
+    shape-checked."""
+    data = np.load(_npz(path))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    keys = [_key(p) for p, _ in flat]
+    in_file = set(data.files)
+    problems = [f"{k}: in template but missing from file"
+                for k in keys if k not in in_file]
+    problems += [f"{k}: in file but not in template"
+                 for k in sorted(in_file - set(keys))]
+    for k, (_, leaf) in zip(keys, flat):
+        if k not in in_file:
+            continue
+        arr = data[k]
+        if arr.shape != tuple(leaf.shape):
+            problems.append(f"{k}: shape {arr.shape} != "
+                            f"{tuple(leaf.shape)}")
+        elif not cast_dtypes and arr.dtype != np.dtype(leaf.dtype):
+            problems.append(f"{k}: dtype {arr.dtype} != "
+                            f"{np.dtype(leaf.dtype)} "
+                            f"(cast_dtypes=True to allow)")
+    if problems:
+        raise ValueError(
+            f"checkpoint {path!r} does not match the restore template "
+            f"({len(problems)} field(s)): " + "; ".join(problems))
+    leaves = [jnp.asarray(data[k], dtype=leaf.dtype)
+              for k, (_, leaf) in zip(keys, flat)]
+    return jax.tree_util.tree_unflatten(treedef, leaves)

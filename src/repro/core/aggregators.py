@@ -216,7 +216,13 @@ def _mean_factory():
     return lambda x, key=None: mean(x)
 
 
-@register("aggregator", "krum")
+# ``static_kwargs`` records the traced-eligibility audit (DESIGN.md §12):
+# numeric kwargs that MUST stay baked into the program shape — loop trip
+# counts (n_iter), top-k / reshape sizes (m, s), and host-side bucket
+# arithmetic (alpha_max) — so the audit test can prove every scalar is
+# deliberately classified and sweep lane groups are as wide as they can be.
+
+@register("aggregator", "krum", static_kwargs=("m", "alpha_max"))
 def _krum_factory(K, n_byz, m: int = 1, alpha_max: float = 0.25,
                   sharded: Optional[bool] = None):
     bs = _lemma3_bucket_size(K, n_byz, alpha_max)
@@ -228,7 +234,8 @@ def _krum_factory(K, n_byz, m: int = 1, alpha_max: float = 0.25,
     return lambda x, key: bucketing(inner, x, key, bs)
 
 
-@register("aggregator", "rfa", traced_kwargs=("nu",))
+@register("aggregator", "rfa", traced_kwargs=("nu",),
+          static_kwargs=("n_iter", "alpha_max"))
 def _rfa_factory(K, n_byz, n_iter: int = 32, nu=1e-6,
                  alpha_max: float = 0.5, sharded: Optional[bool] = None):
     bs = _lemma3_bucket_size(K, n_byz, alpha_max)
@@ -243,7 +250,8 @@ def _cwmed_factory():
     return lambda x, key=None: coordinate_median(x)
 
 
-@register("aggregator", "centered_clip", traced_kwargs=("tau",))
+@register("aggregator", "centered_clip", traced_kwargs=("tau",),
+          static_kwargs=("n_iter",))
 def _centered_clip_factory(tau=1.0, n_iter: int = 5):
     return lambda x, key=None: centered_clip(x, tau=tau, n_iter=n_iter)
 
@@ -254,7 +262,7 @@ def _trimmed_mean_factory(n_byz, sharded: Optional[bool] = None):
                                             sharded=sharded)
 
 
-@register("aggregator", "bucketing")
+@register("aggregator", "bucketing", static_kwargs=("s",))
 def _bucketing_factory(K, n_byz, inner, s: int = 2):
     """Explicit bucketing with a fixed bucket size ``s`` around any inner
     aggregator spec, e.g. ``bucketing(inner=rfa(n_iter=64), s=2)``.

@@ -167,19 +167,35 @@ def build_byzpg_step(env, cfg: ByzPGConfig, traced=None):
     return step
 
 
-def build_byzpg_loop(env, cfg: ByzPGConfig, T: int, traced=None):
-    """Pure fused loop: one ``lax.scan`` over T iterations."""
+def build_byzpg_window(env, cfg: ByzPGConfig, traced=None):
+    """Window program (DESIGN.md §12): scan the step over an arbitrary
+    slice of the iteration stream with the explicit
+    ``(θ, θ_prev, v_prev, opt_state)`` carry; ``ts`` are absolute
+    iteration indices, ``step_keys`` the matching slice of the full
+    ``split(loop_key, T)`` stream. Chained windows reproduce the
+    uninterrupted scan bit for bit."""
     step = build_byzpg_step(env, cfg, traced)
 
-    def loop(vec0, prev_vec0, v0, opt_state0, step_keys, coin_key):
-        (vec, _, _, _), ys = jax.lax.scan(
-            lambda carry, xs: step(carry, xs, coin_key),
-            (vec0, prev_vec0, v0, opt_state0),
-            (jnp.arange(T), step_keys))
-        hist = {"vec": vec, "returns": ys[0], "coins": ys[1]}
+    def window(carry, ts, step_keys, coin_key):
+        carry, ys = jax.lax.scan(
+            lambda c, xs: step(c, xs, coin_key), carry, (ts, step_keys))
+        hist = {"returns": ys[0], "coins": ys[1]}
         if cfg.telemetry:
             hist["grad_norm"], hist["rejected"] = ys[2], ys[3]
-        return hist
+        return carry, hist
+
+    return window
+
+
+def build_byzpg_loop(env, cfg: ByzPGConfig, T: int, traced=None):
+    """Pure fused loop: one ``lax.scan`` over T iterations — the
+    single-window [0, T) instance of :func:`build_byzpg_window`."""
+    window = build_byzpg_window(env, cfg, traced)
+
+    def loop(vec0, prev_vec0, v0, opt_state0, step_keys, coin_key):
+        (vec, _, _, _), hist = window((vec0, prev_vec0, v0, opt_state0),
+                                      jnp.arange(T), step_keys, coin_key)
+        return {"vec": vec, **hist}
 
     return loop
 
@@ -244,4 +260,5 @@ def run_byzpg_legacy(env, cfg: ByzPGConfig, T: int, eval_every: int = 1):
 register("algo", "byzpg")(lambda: engine.AlgoDef(
     ByzPGConfig, build_byzpg_loop, init_byzpg_carry,
     run_byzpg, run_byzpg_legacy,
-    traced_fields=("eta", "gamma", "baseline", "switch_p")))
+    traced_fields=("eta", "gamma", "baseline", "switch_p"),
+    build_window=build_byzpg_window, carry_hist="vec"))

@@ -201,21 +201,39 @@ def build_decbyzpg_step(env, cfg: DecByzPGConfig, traced=None):
     return step
 
 
-def build_decbyzpg_loop(env, cfg: DecByzPGConfig, T: int, traced=None):
-    """Pure fused loop: one ``lax.scan`` over T iterations returning
-    stacked on-device histories (no per-step host traffic)."""
+def build_decbyzpg_window(env, cfg: DecByzPGConfig, traced=None):
+    """Window program (DESIGN.md §12): scan the step over an arbitrary
+    contiguous slice of the iteration stream, taking and returning the
+    explicit ``(θ, θ_prev, opt_state)`` carry.
+
+    ``window(carry, ts (W,), step_keys (W, 2), coin_key) -> (carry, ys)``
+    where ``ts`` are *absolute* iteration indices and ``step_keys`` the
+    matching slice of the full ``split(loop_key, T)`` stream — chaining
+    windows over ``[0, T)`` is the uninterrupted scan, bit for bit, and
+    the compiled shape depends only on W (never on the window offset)."""
     step = build_decbyzpg_step(env, cfg, traced)
 
-    def loop(theta0, theta_prev0, opt0, step_keys, coin_key):
-        (theta, _, _), ys = jax.lax.scan(
-            lambda carry, xs: step(carry, xs, coin_key),
-            (theta0, theta_prev0, opt0),
-            (jnp.arange(T), step_keys))
-        hist = {"theta": theta, "returns": ys[0], "coins": ys[1],
-                "diameter": ys[2]}
+    def window(carry, ts, step_keys, coin_key):
+        carry, ys = jax.lax.scan(
+            lambda c, xs: step(c, xs, coin_key), carry, (ts, step_keys))
+        hist = {"returns": ys[0], "coins": ys[1], "diameter": ys[2]}
         if cfg.telemetry:
             hist["grad_norm"], hist["rejected"] = ys[3], ys[4]
-        return hist
+        return carry, hist
+
+    return window
+
+
+def build_decbyzpg_loop(env, cfg: DecByzPGConfig, T: int, traced=None):
+    """Pure fused loop: one ``lax.scan`` over T iterations returning
+    stacked on-device histories (no per-step host traffic) — the
+    single-window [0, T) instance of :func:`build_decbyzpg_window`."""
+    window = build_decbyzpg_window(env, cfg, traced)
+
+    def loop(theta0, theta_prev0, opt0, step_keys, coin_key):
+        (theta, _, _), hist = window((theta0, theta_prev0, opt0),
+                                     jnp.arange(T), step_keys, coin_key)
+        return {"theta": theta, **hist}
 
     return loop
 
@@ -287,4 +305,5 @@ def run_decbyzpg_legacy(env, cfg: DecByzPGConfig, T: int):
 register("algo", "decbyzpg")(lambda: engine.AlgoDef(
     DecByzPGConfig, build_decbyzpg_loop, init_decbyzpg_carry,
     run_decbyzpg, run_decbyzpg_legacy,
-    traced_fields=("eta", "gamma", "baseline", "switch_p")))
+    traced_fields=("eta", "gamma", "baseline", "switch_p"),
+    build_window=build_decbyzpg_window, carry_hist="theta"))

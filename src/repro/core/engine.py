@@ -136,13 +136,25 @@ class AlgoDef(NamedTuple):
     accept as *traced operands* (via their ``traced=`` mapping) instead of
     baked-in Python constants — the static/traced split behind lane
     batching.  Entries may be derived properties (``switch_p``); only
-    real dataclass fields are blanked in the static representative."""
+    real dataclass fields are blanked in the static representative.
+
+    ``build_window`` is the windowed form of ``build_loop`` (DESIGN.md
+    §12): ``build_window(env, cfg, traced=...)`` returns
+    ``window(carry, ts, step_keys, coin_key) -> (carry, hist_chunk)``
+    scanning an arbitrary contiguous slice of the iteration stream with
+    an explicit carry, so chained windows replay the uninterrupted loop
+    bit for bit.  ``carry_hist`` names the history key the one-shot loop
+    fills from the final ``carry[0]`` (``"theta"`` for DecByzPG's agent
+    stack, ``"vec"`` for ByzPG's server iterate) — window assembly puts
+    it back."""
     config_cls: type
     build_loop: Callable
     init_carry: Callable
     run: Callable
     run_legacy: Callable
     traced_fields: Tuple[str, ...] = ()
+    build_window: Optional[Callable] = None
+    carry_hist: str = "theta"
 
 
 def _algo(name) -> AlgoDef:
@@ -319,10 +331,11 @@ def lane_batch_loop(env, static_cfg, T: int, traced_names, n_rows: int,
     overrides the traced scalars (eta, gamma, switch_p, batchable attack
     kwargs, ...) with its slice of ``vals``, so an L-point scalar sweep ×
     S seeds is a single compile and a single dispatch. The flattened
-    batch axis is sharded over the local ``lane_mesh`` when the row count
+    batch axis is sharded over the ``lane_mesh`` when the row count
     divides the device count (single device: identity layout).
     """
-    from repro.distributed.sharding import lane_mesh, lane_sharding
+    from repro.distributed.sharding import (lane_mesh, lane_out_sharding,
+                                            lane_sharding)
     algo = Spec.of(algo)
     a = _algo(algo)
     names = tuple(traced_names)
@@ -346,9 +359,194 @@ def lane_batch_loop(env, static_cfg, T: int, traced_names, n_rows: int,
         if sharding is None:
             return jax.jit(batched)
         return jax.jit(batched, in_shardings=(sharding, sharding),
-                       out_shardings=sharding)
+                       out_shardings=lane_out_sharding(mesh, n_rows))
 
     return compiled(key, build)
+
+
+# ---------------------------------------------------------------------------
+# Windowed execution (sweep service, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def window_slices(T: int, windows: int) -> tuple:
+    """Split ``[0, T)`` into ``windows`` contiguous ``(start, stop)``
+    slices, near-equal with the remainder spread over the leading
+    windows — at most two distinct widths, so a windowed run compiles at
+    most two window programs regardless of W."""
+    if not 1 <= windows <= T:
+        raise ValueError(f"windows must be in [1, T={T}], got {windows}")
+    base, rem = divmod(T, windows)
+    out, start = [], 0
+    for w in range(windows):
+        stop = start + base + (1 if w < rem else 0)
+        out.append((start, stop))
+        start = stop
+    return tuple(out)
+
+
+def lane_init_loop(env, static_cfg, n_rows: int, algo="decbyzpg"):
+    """Compiled ``seeds (R,) int32 -> carry stack``: each row's algorithm
+    carry (theta stack, optimizer state, ...) from its canonical init
+    key, vmapped over the flattened lane×seed batch.  Row r's carry is
+    exactly what :func:`lane_batch_loop` builds internally for the same
+    seed — the entry point of the windowed execution path."""
+    from repro.distributed.sharding import (lane_mesh, lane_out_sharding,
+                                            lane_sharding)
+    algo = Spec.of(algo)
+    a = _algo(algo)
+    mesh = lane_mesh()
+    sharding = lane_sharding(mesh, n_rows)
+    key = ("lanes_init", algo, env.name, env.horizon,
+           static_key(static_cfg), n_rows,
+           None if sharding is None else mesh.size)
+
+    def build():
+        def one(seed):
+            return a.init_carry(env, static_cfg, seed_keys(seed).init)
+
+        batched = jax.vmap(one)
+        if sharding is None:
+            return jax.jit(batched)
+        return jax.jit(batched, in_shardings=(sharding,),
+                       out_shardings=lane_out_sharding(mesh, n_rows))
+
+    return compiled(key, build)
+
+
+def lane_window_loop(env, static_cfg, T: int, traced_names, W: int,
+                     n_rows: int, algo="decbyzpg"):
+    """Compiled window step ``(carry, vals (R, n), seeds (R,), ts (W,))
+    -> (carry, hist chunk)`` over the flattened lane×seed batch.
+
+    ``ts`` holds the window's *absolute* iteration indices as traced
+    data, so the cache key carries no offset: every width-W window of a
+    T-iteration run shares one compiled program.  Each row re-derives
+    its full-T step-key stream from its seed and gathers the ``ts``
+    slice, so chaining the windows of :func:`window_slices` replays the
+    exact key stream of the uninterrupted :func:`lane_batch_loop` scan —
+    bit for bit (``T`` stays in the key because the stream length is
+    baked into the split)."""
+    from repro.distributed.sharding import (lane_mesh, lane_out_sharding,
+                                            lane_sharding)
+    algo = Spec.of(algo)
+    a = _algo(algo)
+    if a.build_window is None:
+        raise ValueError(
+            f"algorithm {algo.canonical()!r} registers no build_window; "
+            f"windowed execution needs the explicit-carry builder")
+    names = tuple(traced_names)
+    mesh = lane_mesh()
+    sharding = lane_sharding(mesh, n_rows)
+    key = ("lanes_window", algo, env.name, env.horizon,
+           static_key(static_cfg), names, T, W, n_rows,
+           None if sharding is None else mesh.size)
+
+    def build():
+        def one(carry, vals, seed, ts):
+            window = a.build_window(env, static_cfg,
+                                    traced=dict(zip(names, vals))) \
+                if names else a.build_window(env, static_cfg)
+            ks = seed_keys(seed)
+            step_keys = jax.random.split(ks.loop, T)[ts]
+            return window(carry, ts, step_keys, ks.coin)
+
+        batched = jax.vmap(one, in_axes=(0, 0, 0, None))
+        if sharding is None:
+            return jax.jit(batched)
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as _P
+        repl = NamedSharding(mesh, _P())
+        out = lane_out_sharding(mesh, n_rows)
+        return jax.jit(batched,
+                       in_shardings=(sharding, sharding, sharding, repl),
+                       out_shardings=(out, out))
+
+    return compiled(key, build)
+
+
+def seed_init_loop(env, cfg, n_seeds: int, algo="decbyzpg"):
+    """Windowed counterpart of :func:`seed_batch_loop`'s init half:
+    compiled ``seeds (S,) -> carry stack`` for one scenario config."""
+    algo = Spec.of(algo)
+    a = _algo(algo)
+    key = ("grid_init", algo, env.name, env.horizon, static_key(cfg),
+           n_seeds)
+
+    def build():
+        def one_seed(seed):
+            return a.init_carry(env, cfg, seed_keys(seed).init)
+
+        return jax.jit(jax.vmap(one_seed))
+
+    return compiled(key, build)
+
+
+def seed_window_loop(env, cfg, T: int, W: int, n_seeds: int,
+                     algo="decbyzpg"):
+    """Windowed counterpart of :func:`seed_batch_loop`: compiled
+    ``(carry, seeds (S,), ts (W,)) -> (carry, hist chunk)`` — the
+    per-scenario (lanes=False) form of :func:`lane_window_loop`, with
+    the same offset-free cache key and bit-identical chaining."""
+    algo = Spec.of(algo)
+    a = _algo(algo)
+    if a.build_window is None:
+        raise ValueError(
+            f"algorithm {algo.canonical()!r} registers no build_window; "
+            f"windowed execution needs the explicit-carry builder")
+    key = ("grid_window", algo, env.name, env.horizon, static_key(cfg),
+           T, W, n_seeds)
+
+    def build():
+        window = a.build_window(env, cfg)
+
+        def one_seed(carry, seed, ts):
+            ks = seed_keys(seed)
+            return window(carry, ts, jax.random.split(ks.loop, T)[ts],
+                          ks.coin)
+
+        return jax.jit(jax.vmap(one_seed, in_axes=(0, 0, None)))
+
+    return compiled(key, build)
+
+
+def lane_carry_struct(env, static_cfg, n_rows: int, algo="decbyzpg"):
+    """Shape/dtype skeleton of the lane carry stack via ``jax.eval_shape``
+    — no compile, no cache entry — for use as a checkpoint restore
+    template when resuming a window mid-T."""
+    a = _algo(Spec.of(algo))
+
+    def one(seed):
+        return a.init_carry(env, static_cfg, seed_keys(seed).init)
+
+    return jax.eval_shape(jax.vmap(one),
+                          jax.ShapeDtypeStruct((n_rows,), jnp.int32))
+
+
+def assemble_hist(carry, chunks, algo="decbyzpg") -> dict:
+    """Stitch window hist chunks (leading row axis, time axis 1) and the
+    final carry back into the one-shot loop's history dict: concatenated
+    per-iteration histories plus the algorithm's ``carry_hist`` key
+    (final ``carry[0]``, e.g. the theta stack) — :func:`summarize`-ready
+    and bit-identical to the uninterrupted loop's output."""
+    a = _algo(Spec.of(algo))
+    hist = {a.carry_hist: np.asarray(carry[0])}
+    for k in chunks[0]:
+        hist[k] = np.concatenate([np.asarray(c[k]) for c in chunks],
+                                 axis=1)
+    return hist
+
+
+def _pad_rows(x, n_pad: int):
+    """Pad a leading row axis to ``n_pad`` by repeating the last row:
+    pad rows are valid (redundant) programs whose outputs are sliced off
+    before summaries, letting uneven lane×seed batches still shard over
+    the lane mesh (DESIGN.md §12)."""
+    n = x.shape[0]
+    if n == n_pad:
+        return x
+    pad = jnp.broadcast_to(x[-1:], (n_pad - n,) + x.shape[1:])
+    return jnp.concatenate([x, pad], axis=0)
 
 
 def summarize(hist: dict, cfg) -> dict:
@@ -393,28 +591,17 @@ def _check_override(cfg_before, cfg_after, assign: dict) -> None:
             f"desired values as an axis instead")
 
 
-def run_grid(env, grid: ScenarioGrid, T: int, algo="decbyzpg",
-             override: Optional[Callable] = None, lanes: bool = True,
-             **base) -> dict:
-    """Run every scenario in ``grid`` for ``T`` iterations.
-
-    ``base`` sets non-axis config fields (N, B, eta, kappa, ...);
-    ``override(cfg) -> cfg`` applies per-scenario adjustments to
-    *non-axis* fields derived from axis values (e.g. fig2's kappa=0 naive
-    baseline) — mutating a swept axis field raises, since the config would
-    silently diverge from its Scenario key. Returns ``{Scenario: summary
-    dict}`` with per-seed histories plus mean ± 95% CI curves, keyed by
-    the grid's keyed tuple over its axis names.
-
-    With ``lanes=True`` (default) scenarios are grouped by static
-    signature (:func:`lane_split`) and each group runs as **one** compiled
-    lane-batched program over the flattened lane×seed batch — an L-point
-    scalar sweep (eta, gamma, a batchable attack sigma, ...) is one
-    compile and one dispatch instead of L. ``lanes=False`` keeps the
-    historical per-scenario dispatch (one :func:`seed_batch_loop` per
-    combination) — the baseline ``bench_engine`` measures against.
-    """
-    a = _algo(algo)
+def grid_scenarios(grid: ScenarioGrid, algo="decbyzpg",
+                   override: Optional[Callable] = None,
+                   base: Optional[dict] = None):
+    """Resolve a grid into ``(axes, [(scenario_key, cfg), ...])`` — the
+    scenario construction shared by :func:`run_grid` and ``repro.sweep``:
+    axis validation, base-field merging, and the ``override`` hook with
+    its axis-mutation check.  Deterministic order (itertools.product over
+    the axis mapping), so a resumed sweep re-derives the identical
+    scenario list."""
+    a = _algo(Spec.of(algo))
+    base = dict(base or {})
     cfg_cls = a.config_cls
     fields = {f.name for f in dataclasses.fields(cfg_cls)}
     axes = grid.resolved_axes()
@@ -436,7 +623,6 @@ def run_grid(env, grid: ScenarioGrid, T: int, algo="decbyzpg",
     for n in overlap:
         axes[n] = (base.pop(n),)
     key_cls = scenario_key(axes)
-    seeds = jnp.asarray(grid.seeds, jnp.int32)
     scenarios = []
     for combo in itertools.product(*axes.values()):
         assign = {k: v for k, v in zip(axes, combo) if k in fields}
@@ -446,6 +632,64 @@ def run_grid(env, grid: ScenarioGrid, T: int, algo="decbyzpg",
             _check_override(cfg, cfg2, assign)
             cfg = cfg2
         scenarios.append((key_cls(*combo), cfg))
+    return axes, scenarios
+
+
+def lane_groups(scenarios, algo="decbyzpg") -> dict:
+    """Group ``(scenario, cfg)`` pairs by lane-static signature
+    (:func:`lane_split`): ``{(static_cfg, names): [(scn, cfg, vals)]}``
+    in first-appearance order.  One group is both the unit of
+    compilation for lane batching and the unit of checkpointing for the
+    sweep service (``repro.sweep``)."""
+    a = _algo(Spec.of(algo))
+    groups: dict = {}
+    for scn, cfg in scenarios:
+        static_cfg, names, vals = lane_split(cfg, a.traced_fields)
+        groups.setdefault((static_cfg, names), []).append((scn, cfg, vals))
+    return groups
+
+
+def lane_operands(members, seeds, n_pad: int):
+    """Flattened ``(vals (R, n), seeds (R,))`` device operands for one
+    lane group's members × the seed batch, padded to ``n_pad`` rows
+    (:func:`_pad_rows`).  Traced values go float64 host-side and are
+    canonicalized by ``jnp.asarray`` to the ambient float dtype (f32 by
+    default, f64 under jax_enable_x64) so the operands match what
+    ``lanes=False`` bakes in as Python constants."""
+    S = len(seeds)
+    vals = np.asarray([m[2] for m in members], np.float64)
+    vals_flat = _pad_rows(jnp.asarray(np.repeat(vals, S, axis=0)), n_pad)
+    seeds_flat = _pad_rows(jnp.tile(seeds, len(members)), n_pad)
+    return vals_flat, seeds_flat
+
+
+def run_grid(env, grid: ScenarioGrid, T: int, algo="decbyzpg",
+             override: Optional[Callable] = None, lanes: bool = True,
+             **base) -> dict:
+    """Run every scenario in ``grid`` for ``T`` iterations.
+
+    ``base`` sets non-axis config fields (N, B, eta, kappa, ...);
+    ``override(cfg) -> cfg`` applies per-scenario adjustments to
+    *non-axis* fields derived from axis values (e.g. fig2's kappa=0 naive
+    baseline) — mutating a swept axis field raises, since the config would
+    silently diverge from its Scenario key. Returns ``{Scenario: summary
+    dict}`` with per-seed histories plus mean ± 95% CI curves, keyed by
+    the grid's keyed tuple over its axis names.
+
+    With ``lanes=True`` (default) scenarios are grouped by static
+    signature (:func:`lane_split`) and each group runs as **one** compiled
+    lane-batched program over the flattened lane×seed batch — an L-point
+    scalar sweep (eta, gamma, a batchable attack sigma, ...) is one
+    compile and one dispatch instead of L. When the flattened row count
+    does not divide the lane-mesh device count, the batch is padded with
+    masked duplicate rows (sliced off before summaries) so uneven groups
+    still shard. ``lanes=False`` keeps the historical per-scenario
+    dispatch (one :func:`seed_batch_loop` per combination) — the baseline
+    ``bench_engine`` measures against.
+    """
+    _, scenarios = grid_scenarios(grid, algo=algo, override=override,
+                                  base=base)
+    seeds = jnp.asarray(grid.seeds, jnp.int32)
     if not lanes:
         results = {}
         for si, (scn, cfg) in enumerate(scenarios):
@@ -460,32 +704,29 @@ def run_grid(env, grid: ScenarioGrid, T: int, algo="decbyzpg",
         return results
     # group scenario lanes by static signature: scalar-only axes collapse
     # into one compiled program per group, seeds stay vmapped inside
-    groups: dict = {}
-    for scn, cfg in scenarios:
-        static_cfg, names, vals = lane_split(cfg, a.traced_fields)
-        groups.setdefault((static_cfg, names), []).append((scn, cfg, vals))
+    from repro.distributed.sharding import lane_mesh, padded_rows
+    groups = lane_groups(scenarios, algo=algo)
+    mesh = lane_mesh()
     S = len(grid.seeds)
     results = {}
     for gi, ((static_cfg, names), members) in enumerate(groups.items()):
         L = len(members)
+        rows = L * S
+        n_pad = padded_rows(mesh, rows)
         before = compile_count()
-        loop = lane_batch_loop(env, static_cfg, T, names, L * S, algo)
+        loop = lane_batch_loop(env, static_cfg, T, names, n_pad, algo)
         fresh = compile_count() > before    # first dispatch will compile
         if obs.enabled():
             obs.progress(f"run_grid group {gi + 1}/{len(groups)}: "
                          f"{L} lane(s) x {S} seed(s)"
                          + (" [compiling]" if fresh else " [cached]"),
                          group=gi, lanes=L, seeds=S, fresh_compile=fresh)
-        # float64 host-side, canonicalized by jnp.asarray to the ambient
-        # float dtype (f32 by default, f64 under jax_enable_x64) so the
-        # operands match what lanes=False bakes in as Python constants
-        vals = np.asarray([m[2] for m in members], np.float64)
-        vals_flat = jnp.asarray(np.repeat(vals, S, axis=0))   # (L*S, n)
-        seeds_flat = jnp.tile(seeds, L)
+        vals_flat, seeds_flat = lane_operands(members, seeds, n_pad)
         with obs.host_span("run_grid.group", group=gi, lanes=L,
-                           rows=L * S, fresh_compile=fresh):
+                           rows=rows, fresh_compile=fresh):
             hist = jax.block_until_ready(loop(vals_flat, seeds_flat))
         for i, (scn, cfg, _) in enumerate(members):
+            # the per-scenario slice never reaches the pad rows (i < L)
             lane = {k: v[i * S:(i + 1) * S] for k, v in hist.items()}
             results[scn] = summarize(lane, cfg)
     return {scn: results[scn] for scn, _ in scenarios}

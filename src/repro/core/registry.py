@@ -284,6 +284,37 @@ class Registry:
                 kwargs.pop(name, None)
         return Spec(spec.name, **kwargs), traced
 
+    #: factory parameters exempt from the traced/static audit: federation
+    #: shape (K, n_byz), nested component specs, and backend toggles
+    AUDIT_EXEMPT = ("K", "n_byz", "inner", "sharded")
+
+    def unclassified_kwargs(self, namespace: str) -> Dict[str, tuple]:
+        """Traced-eligibility audit (DESIGN.md §12): every factory kwarg
+        with a numeric default must be deliberately classified as either
+        ``traced_kwargs`` (lane-batchable data — sweeping it keeps one
+        compiled program) or ``static_kwargs`` (program shape: loop trip
+        counts, top-k/reshape sizes, host-side bucket math).  Returns
+        ``{component: (kwarg, ...)}`` for any name in neither set — the
+        audit test keeps this empty so new scalars can't silently narrow
+        sweep lane groups."""
+        self._ensure_loaded(namespace)
+        out: Dict[str, tuple] = {}
+        for (ns, name), factory in sorted(self._factories.items()):
+            if ns != namespace:
+                continue
+            meta = self._meta[(ns, name)]
+            classified = (set(meta.get("traced_kwargs", ()))
+                          | set(meta.get("static_kwargs", ())))
+            missing = tuple(
+                n for n, p in inspect.signature(factory)
+                .parameters.items()
+                if n not in self.AUDIT_EXEMPT and n not in classified
+                and isinstance(p.default, (int, float))
+                and not isinstance(p.default, bool))
+            if missing:
+                out[name] = missing
+        return out
+
     def _factory(self, namespace: str, name: str) -> Callable:
         self._ensure_loaded(namespace)
         try:

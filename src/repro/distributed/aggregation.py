@@ -269,7 +269,13 @@ register("fed_aggregator", "krum")(lambda: agg_krum)
 register("fed_aggregator", "trimmed_mean")(lambda: agg_trimmed_mean)
 
 
-@register("fed_aggregator", "rfa")
+# fed_* components feed the transformer-scale train step, which has no
+# lane-batching path — every scalar is deliberately static_kwargs so the
+# registry kwarg audit (engine lane tests) stays exhaustive: n_iter is a
+# Python loop trip count; sigma/scale/nu could only become traced here by
+# threading a traced= plumb through fed_train_step (not worth it for a
+# step that runs one config at a time).
+@register("fed_aggregator", "rfa", static_kwargs=("n_iter", "nu"))
 def _fed_rfa_factory(n_iter: int = 8, nu: float = 1e-6):
     return functools.partial(agg_rfa, n_iter=n_iter, nu=nu)
 
@@ -336,7 +342,7 @@ def _fed_none_factory():
     return lambda tree, byz_mask, key: tree
 
 
-@register("fed_attack", "large_noise")
+@register("fed_attack", "large_noise", static_kwargs=("sigma",))
 def _fed_large_noise_factory(sigma: float = 100.0):
     def fn(tree, byz_mask, key):
         leaves, treedef = jax.tree.flatten(tree)
@@ -360,7 +366,7 @@ def _fed_avg_zero_factory():
     return fn
 
 
-@register("fed_attack", "sign_flip")
+@register("fed_attack", "sign_flip", static_kwargs=("scale",))
 def _fed_sign_flip_factory(scale: float = 3.0):
     def fn(tree, byz_mask, key):
         n_h = jnp.maximum(jnp.sum(~byz_mask), 1)

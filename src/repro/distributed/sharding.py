@@ -13,6 +13,7 @@ Federation mapping (DESIGN.md §3):
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Optional, Tuple
 
 import jax
@@ -28,12 +29,42 @@ from repro.configs.base import ModelConfig
 # ---------------------------------------------------------------------------
 
 
-def lane_mesh(devices=None) -> Optional[Mesh]:
+#: lane-mesh override stack (see :func:`use_lane_mesh`); the top entry —
+#: which may be None, meaning "no sharding" — replaces the default
+#: local-devices mesh everywhere the engine asks for one.
+_LANE_MESH: list = []
+
+
+@contextlib.contextmanager
+def use_lane_mesh(mesh: Optional[Mesh]):
+    """Install ``mesh`` as the engine's lane mesh for the dynamic extent
+    of the context — how the sweep service points the whole lane-batching
+    stack (init/window/one-shot programs, padding) at a process-spanning
+    mesh without threading a mesh argument through every layer.  Passing
+    None disables lane sharding entirely."""
+    _LANE_MESH.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _LANE_MESH.pop()
+
+
+def lane_mesh(devices=None, spanning: bool = False) -> Optional[Mesh]:
     """1-D ``("lane",)`` mesh over the local devices, used by the engine
     to spread a flattened lane×seed scenario batch (DESIGN.md §2).
     Returns None on a single device — the identity layout, so CPU tests
-    and single-chip runs skip sharding entirely."""
-    devs = list(jax.local_devices()) if devices is None else list(devices)
+    and single-chip runs skip sharding entirely.
+
+    ``spanning=True`` builds the mesh over **all** processes' devices
+    (``jax.devices()``), the process-spanning layout the sweep service
+    uses after :func:`init_distributed`: every process dispatches the
+    same program and XLA moves each row's work to the process owning its
+    shard (DESIGN.md §12)."""
+    if devices is None:
+        if _LANE_MESH:
+            return _LANE_MESH[-1]
+        devices = jax.devices() if spanning else jax.local_devices()
+    devs = list(devices)
     if len(devs) <= 1:
         return None
     return Mesh(np.asarray(devs), ("lane",))
@@ -43,10 +74,93 @@ def lane_sharding(mesh: Optional[Mesh], n_rows: int) \
         -> Optional[NamedSharding]:
     """NamedSharding splitting a leading batch axis of size ``n_rows``
     over the lane mesh; None (replicate — the identity layout) without a
-    mesh or when the batch does not divide the device count evenly."""
+    mesh or when the batch does not divide the device count evenly (the
+    engine pads batches to :func:`padded_rows` precisely so this keeps
+    dividing)."""
     if mesh is None or n_rows % mesh.size != 0:
         return None
     return NamedSharding(mesh, P("lane"))
+
+
+def spans_processes(mesh: Optional[Mesh]) -> bool:
+    """True when the mesh holds devices from more than one process."""
+    if mesh is None:
+        return False
+    return len({d.process_index for d in mesh.devices.flat}) > 1
+
+
+def lane_out_sharding(mesh: Optional[Mesh], n_rows: int) \
+        -> Optional[NamedSharding]:
+    """Output sharding for lane-batched programs: row-sharded like the
+    inputs on a local mesh, but **fully replicated** on a
+    process-spanning mesh so every host can pull complete histories for
+    summaries/checkpoints (a cross-process row-sharded output would be
+    only partially addressable on each host)."""
+    s = lane_sharding(mesh, n_rows)
+    if s is not None and spans_processes(mesh):
+        return NamedSharding(mesh, P())
+    return s
+
+
+def padded_rows(mesh: Optional[Mesh], n_rows: int) -> int:
+    """Smallest multiple of the lane-mesh device count ≥ ``n_rows``
+    (``n_rows`` itself without a mesh).  The engine pads the flattened
+    lane×seed batch to this size with duplicate rows — sliced off before
+    summaries — so uneven batches shard over the mesh instead of falling
+    back to the identity layout."""
+    if mesh is None or n_rows % mesh.size == 0:
+        return n_rows
+    return ((n_rows + mesh.size - 1) // mesh.size) * mesh.size
+
+
+def init_distributed(coordinator_address: str, num_processes: int,
+                     process_id: int) -> None:
+    """Bring up the cross-process runtime for a spanning lane mesh.
+
+    On the CPU backend jax's cross-process collectives need the gloo
+    transport, and the flag must land **before** the backend
+    initializes — ``jax.distributed.initialize`` alone leaves the
+    default in place and the first spanning dispatch fails with
+    "Multiprocess computations aren't implemented on the CPU backend".
+    No-op for a single process."""
+    if num_processes <= 1:
+        return
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:
+        pass    # older jaxlib without the option: GPU/TPU transports only
+    jax.distributed.initialize(coordinator_address=coordinator_address,
+                               num_processes=num_processes,
+                               process_id=process_id)
+
+
+def global_rows(mesh: Mesh, arr) -> jax.Array:
+    """Assemble a process-spanning global array from a host-local copy
+    of the full ``(R, ...)`` batch: every process holds the same host
+    value (sweep operands are derived deterministically from the grid)
+    and contributes the shards of the rows its devices own."""
+    sharding = NamedSharding(mesh, P("lane"))
+    arr = np.asarray(arr)
+    return jax.make_array_from_callback(
+        arr.shape, sharding, lambda idx: arr[idx])
+
+
+def host_assignment(costs, n_hosts: int) -> list:
+    """Greedy longest-processing-time schedule: ``assign[i]`` is the
+    host owning group ``i``, balancing summed cost per host.  The
+    work-partitioning fallback when processes cannot form a spanning
+    mesh — uneven lane groups land on the least-loaded host (ties to
+    the lowest rank) so no process idles while another drains a long
+    tail."""
+    costs = [float(c) for c in costs]
+    order = sorted(range(len(costs)), key=lambda i: (-costs[i], i))
+    loads = [0.0] * max(int(n_hosts), 1)
+    assign = [0] * len(costs)
+    for i in order:
+        h = min(range(len(loads)), key=lambda j: (loads[j], j))
+        assign[i] = h
+        loads[h] += costs[i]
+    return assign
 
 # leaf name -> trailing dim that gets the "model" axis
 _MODEL_LAST = {"wq", "wk", "wv", "w_gate", "w_up", "bq", "bk", "bv",

@@ -1,0 +1,24 @@
+"""repro.sweep — windowed, resumable, multi-host sweep service
+(DESIGN.md §12).
+
+:class:`SweepRunner` drives :class:`repro.Experiment`-shaped scenario
+grids as long-running jobs: T chunked into windows through the engine's
+explicit-carry window programs (bit-identical to the one-shot scan),
+per-window checkpoints + a sweep manifest under ``out_dir`` for
+kill-and-resume, process-spanning lane meshes (or per-process group
+sharding) when launched under ``jax.distributed``, and partial summaries
+streamed through ``repro.obs`` sinks.  CLI:
+``python -m repro.launch.sweep``.
+"""
+from repro.sweep.manifest import (MANIFEST, SUMMARY, GroupPaths,
+                                  SweepMismatch, build_manifest,
+                                  check_manifest, commit_window,
+                                  read_json, windows_done, write_json)
+from repro.sweep.runner import SweepError, SweepRunner
+
+__all__ = [
+    "SweepRunner", "SweepError", "SweepMismatch",
+    "MANIFEST", "SUMMARY", "GroupPaths",
+    "build_manifest", "check_manifest", "commit_window", "windows_done",
+    "read_json", "write_json",
+]

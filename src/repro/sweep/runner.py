@@ -1,0 +1,351 @@
+"""SweepRunner — windowed, resumable, multi-host grid driver
+(DESIGN.md §12).
+
+Where :class:`repro.Experiment` runs a scenario grid as one one-shot
+``run_grid`` call, the sweep service drives the *same* grid as a
+long-running job built from the engine's windowed programs:
+
+* T is chunked into W windows (:func:`repro.core.engine.window_slices`)
+  and each lane group advances one window at a time through
+  :func:`repro.core.engine.lane_window_loop`, whose explicit carry makes
+  the chain bit-identical to the uninterrupted scan;
+* after every window the carry, the history chunk, and the group's
+  progress record land in the sweep directory (atomic writes, progress
+  committed last), so a preempted sweep resumes from its manifest:
+  completed lane groups are reloaded without compiling or dispatching
+  anything, partial ones restart mid-T from their carry;
+* with multiple processes (``jax.process_count() > 1`` after
+  :func:`repro.distributed.sharding.init_distributed`) the flattened
+  lane×seed batch spans all processes' devices on a ``spanning`` lane
+  mesh — or, in ``mode="shard"``, whole lane groups are partitioned
+  across processes by greedy longest-processing-time assignment and
+  merged through the shared sweep directory;
+* partial summaries stream through ``repro.obs`` sinks as windows and
+  lane groups finish (``sweep.window`` / ``sweep.partial`` records).
+
+CLI: ``python -m repro.launch.sweep`` (``--windows``, ``--resume DIR``,
+``--processes`` — see README "Resumable sweeps").
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import time
+from typing import Callable, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.checkpoint import restore, save
+from repro.core import engine
+from repro.core.registry import Spec
+from repro.distributed.sharding import (global_rows, host_assignment,
+                                        lane_mesh, padded_rows,
+                                        spans_processes, use_lane_mesh)
+from repro.rl.envs import make_env
+from repro.sweep import manifest as mf
+
+SweepMismatch = mf.SweepMismatch
+
+
+class SweepError(RuntimeError):
+    """Unrecoverable sweep-service condition (bad mode, merge timeout,
+    non-persistable configuration)."""
+
+
+def _jsonable(v):
+    if isinstance(v, Spec):
+        return v.canonical()
+    if isinstance(v, (bool, int, float, str)) or v is None:
+        return v
+    if isinstance(v, (tuple, list)):
+        return [_jsonable(x) for x in v]
+    raise SweepError(
+        f"cannot persist {v!r} in a sweep manifest; use spec strings "
+        f"and plain scalars for axes/base fields of a resumable sweep")
+
+
+def _from_json(v):
+    """Undo the JSON round-trip of :func:`_jsonable`: sequences come back
+    as lists but configs need the hashable tuple form (hidden=(8,))."""
+    if isinstance(v, list):
+        return tuple(_from_json(x) for x in v)
+    return v
+
+
+class SweepRunner:
+    """Drive an Experiment-shaped grid as a windowed, resumable job.
+
+    Constructor arguments mirror :class:`repro.Experiment` (``algo``,
+    ``env``, ``T``, ``seeds``, ``axes``, ``override``, plus base config
+    fields), with the service knobs on top:
+
+    ``windows``
+        number of window chunks T is split into (1 = one-shot-sized
+        windows, still through the windowed programs).
+    ``out_dir``
+        sweep directory for the manifest + per-group checkpoints; None
+        runs fully in memory (not resumable).
+    ``mode``
+        ``"auto"`` (spanning mesh when multiple processes are present,
+        plain local execution otherwise), ``"span"``, ``"shard"`` (one
+        lane group per process, greedy LPT-balanced, merged through
+        ``out_dir``), or ``"local"``.
+
+    ``run(max_windows=N)`` executes at most N windows and returns None
+    if the sweep is unfinished (the crash-simulation hook CI's resume
+    smoke uses); a later ``run()`` — or ``SweepRunner.resume(out_dir)``
+    in a fresh process — picks up from the manifest.  The completed
+    sweep returns an :class:`repro.ExperimentResult` bit-identical to
+    the one-shot ``run_grid`` over the same grid.
+    """
+
+    def __init__(self, algo="decbyzpg", env="cartpole", T: int = 50,
+                 seeds=(0, 1, 2), axes: Optional[Mapping] = None,
+                 override: Optional[Callable] = None, windows: int = 1,
+                 out_dir: Optional[str] = None, mode: str = "auto",
+                 poll_s: float = 0.2, timeout_s: float = 600.0, **base):
+        self.algo = Spec.of(algo)
+        self.env_spec = env
+        self.T = int(T)
+        self.seeds = tuple(range(seeds)) if isinstance(seeds, int) \
+            else tuple(seeds)
+        self.axes = {k: engine._as_axis(tuple(v) if isinstance(v, list)
+                                        else v)
+                     for k, v in dict(axes or {}).items()}
+        self.override = override
+        self.windows = int(windows)
+        self.out_dir = out_dir
+        if mode not in ("auto", "local", "span", "shard"):
+            raise SweepError(f"unknown sweep mode {mode!r}")
+        self.mode = mode
+        self.poll_s = float(poll_s)
+        self.timeout_s = float(timeout_s)
+        self.base = base
+
+    @classmethod
+    def resume(cls, out_dir: str, override: Optional[Callable] = None,
+               mode: str = "auto", **kw) -> "SweepRunner":
+        """Reconstruct a runner from ``out_dir``'s manifest.  A sweep
+        recorded with an ``override`` hook cannot round-trip the hook
+        itself — pass the same function again or this raises."""
+        doc = mf.read_json(os.path.join(out_dir, mf.MANIFEST))
+        m = doc["meta"]
+        if m.get("override") and override is None:
+            raise SweepError(
+                f"sweep was recorded with override hook "
+                f"{m['override']!r}; pass override= to resume()")
+        base = {k: _from_json(v) for k, v in m["base"].items()}
+        return cls(algo=m["algo"], env=m["env"], T=m["T"],
+                   seeds=tuple(m["seeds"]),
+                   axes={k: tuple(_from_json(x) for x in v)
+                         for k, v in m["axes"]},
+                   override=override, windows=m["windows"],
+                   out_dir=out_dir, mode=mode, **{**base, **kw})
+
+    # -- sweep description ---------------------------------------------------
+
+    def _meta(self) -> dict:
+        env = self.env_spec
+        return {"algo": self.algo.canonical(),
+                "env": (Spec.of(env).canonical()
+                        if isinstance(env, (str, Spec)) else env.name),
+                "T": self.T, "seeds": list(self.seeds),
+                "windows": self.windows,
+                # list of [name, values] pairs, NOT a mapping: axis order
+                # defines the scenario-key tuples and must survive the
+                # sort_keys JSON round-trip
+                "axes": [[k, [_jsonable(v) for v in vals]]
+                         for k, vals in self.axes.items()],
+                "base": {k: _jsonable(v) for k, v in self.base.items()},
+                "override": (getattr(self.override, "__qualname__",
+                                     repr(self.override))
+                             if self.override is not None else None)}
+
+    # -- execution -----------------------------------------------------------
+
+    def run(self, max_windows: Optional[int] = None) \
+            -> Optional[engine.ExperimentResult]:
+        """Advance the sweep; returns the completed
+        :class:`repro.ExperimentResult`, or None when ``max_windows``
+        ran out first (progress is committed — call again to continue)."""
+        env = make_env(self.env_spec)
+        grid = engine.ScenarioGrid(seeds=self.seeds, axes=self.axes)
+        _, scenarios = engine.grid_scenarios(
+            grid, algo=self.algo, override=self.override,
+            base=dict(self.base))
+        groups = list(engine.lane_groups(scenarios, algo=self.algo)
+                      .items())
+        slices = engine.window_slices(self.T, self.windows)
+        n_proc, pid = jax.process_count(), jax.process_index()
+        mode = self.mode
+        if mode == "auto":
+            mode = "span" if n_proc > 1 else "local"
+        if mode == "shard" and n_proc > 1 and self.out_dir is None:
+            raise SweepError(
+                "mode='shard' needs a shared out_dir to merge groups")
+        ctx = use_lane_mesh(lane_mesh(spanning=True)) \
+            if mode == "span" and n_proc > 1 else contextlib.nullcontext()
+        with ctx:
+            return self._run(env, scenarios, groups, slices, mode,
+                             n_proc, pid, max_windows)
+
+    def _run(self, env, scenarios, groups, slices, mode, n_proc, pid,
+             max_windows):
+        mesh = lane_mesh()
+        S = len(self.seeds)
+        entries = []
+        for gi, ((static_cfg, names), members) in enumerate(groups):
+            rows = len(members) * S
+            entries.append({
+                "gid": gi, "signature": f"{static_cfg!r}|{names!r}",
+                "lanes": len(members), "rows": rows,
+                "n_pad": padded_rows(mesh, rows),
+                "scenarios": [engine.ExperimentResult.scenario_name(s)
+                              for s, _, _ in members]})
+        persist = self.out_dir is not None
+        # manifest writer: rank 0 creates it, everyone validates theirs
+        # against it (a mismatched resume dir fails before any compute)
+        if persist:
+            wanted = mf.build_manifest(self._meta(), slices, entries)
+            doc = mf.load_or_init(self.out_dir, wanted, write=(pid == 0))
+            deadline = time.time() + self.timeout_s
+            while doc is None:      # non-zero ranks wait for the writer
+                if time.time() > deadline:
+                    raise SweepError("timed out waiting for manifest")
+                time.sleep(self.poll_s)
+                doc = mf.load_or_init(self.out_dir, wanted,
+                                      write=(pid == 0))
+        owners = host_assignment(
+            [e["rows"] * self.T for e in entries], n_proc) \
+            if mode == "shard" else None
+        budget = [max_windows] if max_windows is not None else None
+        results: dict = {}
+        pending = []
+        for gi, ((static_cfg, names), members) in enumerate(groups):
+            if owners is not None and owners[gi] != pid:
+                pending.append((gi, static_cfg, names, members))
+                continue
+            writer = persist and (pid == 0 if mode == "span" else True)
+            gp = mf.GroupPaths(self.out_dir, gi) if persist else None
+            hist = self._run_group(env, static_cfg, names, members, gi,
+                                   gp, slices, entries[gi]["n_pad"],
+                                   budget, writer, mesh)
+            if hist is None:        # max_windows exhausted mid-sweep
+                return None
+            self._summarize_group(hist, members, results, gi,
+                                  len(groups))
+        # shard mode: groups owned by other processes arrive through the
+        # shared sweep dir once their state says every window committed
+        deadline = time.time() + self.timeout_s
+        for gi, static_cfg, names, members in pending:
+            gp = mf.GroupPaths(self.out_dir, gi)
+            while mf.windows_done(gp) < len(slices):
+                if time.time() > deadline:
+                    raise SweepError(
+                        f"timed out waiting for group {gi} (owner "
+                        f"process {owners[gi]}) to finish")
+                time.sleep(self.poll_s)
+            hist = self._load_group(env, static_cfg, members, gp,
+                                    len(slices))
+            self._summarize_group(hist, members, results, gi,
+                                  len(groups))
+        ordered = {scn: results[scn] for scn, _ in scenarios}
+        meta = self._meta()
+        result = engine.ExperimentResult(meta, self.axes, ordered)
+        if persist and pid == 0:
+            result.to_json(os.path.join(self.out_dir, mf.SUMMARY))
+        return result
+
+    def _run_group(self, env, static_cfg, names, members, gi, gp,
+                   slices, n_pad, budget, writer, mesh):
+        W = len(slices)
+        wdone = mf.windows_done(gp) if gp is not None else 0
+        if wdone >= W:
+            # fully committed: reload artifacts — no compile, no dispatch
+            return self._load_group(env, static_cfg, members, gp, W)
+        span = spans_processes(mesh)
+        seeds = jnp.asarray(self.seeds, jnp.int32)
+        vals_flat, seeds_flat = engine.lane_operands(members, seeds,
+                                                     n_pad)
+        if span:
+            # every process holds the same host operands; assemble the
+            # global arrays each process's devices need shards of
+            vals_flat = global_rows(mesh, np.asarray(vals_flat))
+            seeds_flat = global_rows(mesh, np.asarray(seeds_flat))
+        if wdone == 0:
+            init = engine.lane_init_loop(env, static_cfg, n_pad,
+                                         self.algo)
+            carry = init(seeds_flat)
+        else:
+            carry = restore(
+                engine.lane_carry_struct(env, static_cfg, n_pad,
+                                         self.algo), gp.carry)
+        chunks = [self._load_chunk(gp.window(w)) for w in range(wdone)]
+        for w in range(wdone, W):
+            if budget is not None and budget[0] <= 0:
+                return None
+            start, stop = slices[w]
+            win = engine.lane_window_loop(env, static_cfg, self.T,
+                                          names, stop - start, n_pad,
+                                          self.algo)
+            # spanning meshes hand carries back fully replicated (so any
+            # host can checkpoint them); re-shard by row before the next
+            # window — jit refuses to silently reshard committed global
+            # arrays whose layout disagrees with in_shardings
+            carry_dev = jax.tree.map(
+                lambda x: global_rows(mesh, np.asarray(x)), carry) \
+                if span else carry
+            carry, ch = jax.block_until_ready(
+                win(carry_dev, vals_flat, seeds_flat,
+                    np.arange(start, stop)))
+            chunks.append(ch)
+            if budget is not None:
+                budget[0] -= 1
+            if writer and gp is not None:
+                # carry + chunk first, progress record last: a crash
+                # between the writes re-runs window w, never skips it
+                save(carry, gp.carry)
+                save(dict(ch), gp.window(w))
+                mf.commit_window(gp, w + 1, stop)
+            if obs.enabled():
+                obs.record("sweep.window", group=gi, window=w,
+                           t_done=stop, T=self.T)
+                obs.progress(f"sweep group {gi}: window {w + 1}/{W} "
+                             f"(t={stop}/{self.T})", group=gi, window=w)
+        return engine.assemble_hist(carry, chunks, self.algo)
+
+    def _load_group(self, env, static_cfg, members, gp, W):
+        # carry template from eval_shape: restore validates names/shapes
+        # without building or dispatching any program
+        rows = len(members) * len(self.seeds)
+        n_pad = padded_rows(lane_mesh(), rows)
+        carry = restore(
+            engine.lane_carry_struct(env, static_cfg, n_pad, self.algo),
+            gp.carry)
+        chunks = [self._load_chunk(gp.window(w)) for w in range(W)]
+        return engine.assemble_hist(carry, chunks, self.algo)
+
+    @staticmethod
+    def _load_chunk(path: str) -> dict:
+        data = np.load(path)
+        return {k: data[k] for k in data.files}
+
+    def _summarize_group(self, hist, members, results, gi, n_groups):
+        S = len(self.seeds)
+        for i, (scn, cfg, _) in enumerate(members):
+            # pad rows (if any) sit past i == len(members) - 1: never read
+            lane = {k: v[i * S:(i + 1) * S] for k, v in hist.items()}
+            results[scn] = engine.summarize(lane, cfg)
+        if obs.enabled():
+            for scn, _, _ in members:
+                r = results[scn]
+                obs.record(
+                    "sweep.partial",
+                    scenario=engine.ExperimentResult.scenario_name(scn),
+                    final_return_mean=r["final_return_mean"],
+                    final_return_ci95=r["final_return_ci95"])
+            obs.progress(f"sweep group {gi + 1}/{n_groups} complete",
+                         group=gi, scenarios=len(members))

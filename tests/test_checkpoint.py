@@ -58,8 +58,55 @@ def test_restore_shape_mismatch_raises(tmp_path):
 def test_restore_casts_to_template_dtype(tmp_path):
     path = str(tmp_path / "ck.npz")
     save({"x": jnp.asarray([1.5, 2.5], jnp.float32)}, path)
-    out = restore({"x": jnp.zeros((2,), jnp.bfloat16)}, path)
+    # dtype drift is an error by default (a silently narrowed resume is
+    # not bit-identical) — casting is an explicit opt-in
+    with pytest.raises(ValueError, match="cast_dtypes=True"):
+        restore({"x": jnp.zeros((2,), jnp.bfloat16)}, path)
+    out = restore({"x": jnp.zeros((2,), jnp.bfloat16)}, path,
+                  cast_dtypes=True)
     assert out["x"].dtype == jnp.bfloat16
+
+
+def test_restore_names_every_mismatched_field(tmp_path):
+    """A template/file disagreement reports ALL offending fields by name
+    in one error — missing, unexpected, shape, and dtype — instead of
+    failing on the first leaf (the sweep-resume debugging contract)."""
+    path = str(tmp_path / "ck.npz")
+    save({"params": {"w": jnp.ones((3, 4)),
+                     "gone": jnp.zeros((2,))},
+          "step": jnp.asarray(7, jnp.int32)}, path)
+    template = {"params": {"w": jnp.zeros((3, 5)),       # shape drift
+                           "new": jnp.zeros((2,))},      # not in file
+                "step": jnp.asarray(0, jnp.float32)}     # dtype drift
+    with pytest.raises(ValueError) as ei:
+        restore(template, path)
+    msg = str(ei.value)
+    assert "3 field(s)" in msg or "4 field(s)" in msg
+    assert "params/w" in msg and "(3, 5)" in msg        # shape, by name
+    assert "params/new" in msg                          # template-only
+    assert "step" in msg and "float32" in msg           # dtype, by name
+    assert path in msg
+
+
+def test_restore_reports_file_only_fields(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    save({"a": jnp.ones((2,)), "b": jnp.ones((2,))}, path)
+    with pytest.raises(ValueError, match="b"):
+        restore({"a": jnp.zeros((2,))}, path)
+
+
+def test_restore_accepts_shape_dtype_struct_template(tmp_path):
+    """``jax.eval_shape`` skeletons work as restore templates — the path
+    sweep resume uses to validate a carry without compiling anything."""
+    tree = _tree()
+    path = str(tmp_path / "ck.npz")
+    save(tree, path)
+    template = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    out = restore(template, path)
+    for got, want in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                      np.asarray(want, np.float32))
 
 
 def test_resume_equivalence_across_checkpoint(tmp_path):

@@ -525,3 +525,162 @@ def test_lane_grid_aggregator_kwarg_sweep_compiles_once():
     for scn in per:
         np.testing.assert_allclose(lanes[scn]["returns"],
                                    per[scn]["returns"], atol=1e-5)
+
+
+def test_lane_grid_attack_kwarg_sweeps_compile_once():
+    """Every traced attack knob batches: a sign_flip scale sweep and an
+    alie z sweep each collapse to one compiled program per attack name,
+    lane-for-lane equal to the per-scenario dispatch."""
+    for axis in (("sign_flip(scale=1.0)", "sign_flip(scale=3.0)",
+                  "sign_flip(scale=5.0)"),
+                 ("alie(z=0.5)", "alie(z=1.5)", "alie(z=3.0)")):
+        grid = ScenarioGrid(seeds=(0, 1), axes={"attack": axis})
+        kw = dict(algo="decbyzpg", K=3, n_byz=1, aggregator="rfa",
+                  agreement="gda", kappa=2, N=4, B=2, hidden=(8,))
+        engine.clear_cache()
+        lanes = run_grid(ENV, grid, T, lanes=True, **kw)
+        assert engine.compile_count() == 1, axis
+        per = run_grid(ENV, grid, T, lanes=False, **kw)
+        for scn in per:
+            np.testing.assert_allclose(lanes[scn]["returns"],
+                                       per[scn]["returns"], atol=1e-5)
+            np.testing.assert_array_equal(lanes[scn]["samples"],
+                                          per[scn]["samples"])
+
+
+def test_registry_kwarg_audit_is_exhaustive():
+    """Every numeric factory kwarg in the sweepable namespaces is
+    deliberately classified traced (lane-batchable) or static (program
+    shape) — an unclassified scalar would silently split lane groups."""
+    import repro.distributed.aggregation  # noqa: F401  registers fed_*
+    from repro.core.registry import REGISTRY
+    for ns in ("attack", "aggregator", "fed_attack", "fed_aggregator"):
+        assert REGISTRY.unclassified_kwargs(ns) == {}, ns
+    # spot-check the split: bucketing's s reshapes (static), its traced
+    # set stays empty; sign_flip's scale is data (traced)
+    assert "s" in REGISTRY.meta("aggregator", "bucketing")["static_kwargs"]
+    assert "scale" in REGISTRY.meta("attack", "sign_flip")["traced_kwargs"]
+
+
+# ---------------------------------------------------------------------------
+# Windowed execution (sweep service, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def _chain_windows(env, static_cfg, names, T_, slices, n_rows, algo,
+                   vals_flat, seeds_flat):
+    init = engine.lane_init_loop(env, static_cfg, n_rows, algo)
+    carry = init(seeds_flat)
+    chunks = []
+    for start, stop in slices:
+        win = engine.lane_window_loop(env, static_cfg, T_, names,
+                                      stop - start, n_rows, algo)
+        carry, ch = win(carry, vals_flat, seeds_flat,
+                        np.arange(start, stop))
+        chunks.append(ch)
+    return engine.assemble_hist(carry, chunks, algo)
+
+
+def _windowed_vs_oneshot(algo, cfg_kw, axes):
+    import jax.numpy as jnp
+    grid = ScenarioGrid(seeds=(0, 1), axes=axes)
+    _, scenarios = engine.grid_scenarios(grid, algo=algo, base=cfg_kw)
+    ((static_cfg, names), members), = \
+        engine.lane_groups(scenarios, algo=algo).items()
+    n_rows = len(members) * 2
+    vals_flat, seeds_flat = engine.lane_operands(
+        members, jnp.asarray(grid.seeds, jnp.int32), n_rows)
+    one = engine.lane_batch_loop(ENV, static_cfg, T, names, n_rows, algo)
+    ref = {k: np.asarray(v)
+           for k, v in one(vals_flat, seeds_flat).items()}
+    got = _chain_windows(ENV, static_cfg, names, T,
+                         engine.window_slices(T, 3), n_rows, algo,
+                         vals_flat, seeds_flat)
+    assert set(got) == set(ref)
+    for k in ref:
+        np.testing.assert_array_equal(got[k], ref[k], err_msg=k)
+
+
+def test_lane_windows_chain_bit_identical_decbyzpg():
+    """Chaining the window programs over window_slices replays the fused
+    one-shot lane scan bit for bit — same key stream, same carry, same
+    history — for honest and attacked lanes."""
+    _windowed_vs_oneshot(
+        "decbyzpg",
+        dict(K=3, n_byz=1, N=4, B=2, kappa=2, hidden=(8,)),
+        {"eta": (1e-2, 5e-3),
+         "attack": ("large_noise(sigma=10)", "large_noise(sigma=50)")})
+
+
+def test_lane_windows_chain_bit_identical_byzpg():
+    _windowed_vs_oneshot(
+        "byzpg",
+        dict(K=3, n_byz=1, attack="sign_flip", N=4, B=2, hidden=(8,)),
+        {"eta": (1e-2, 2e-2)})
+
+
+def test_lane_window_cache_key_is_offset_free():
+    """Equal-width windows of one run share a single compiled program
+    (the window's absolute indices are traced data, not a cache-key
+    offset): T=5 in W=5 width-1 windows compiles exactly one init + one
+    window entry for five dispatches."""
+    cfg_kw = dict(K=3, n_byz=1, attack="sign_flip", aggregator="rfa",
+                  agreement="gda", kappa=2, N=4, B=2, hidden=(8,))
+    grid = ScenarioGrid(seeds=(0, 1), axes={"eta": (1e-2, 5e-3)})
+    _, scenarios = engine.grid_scenarios(grid, algo="decbyzpg",
+                                         base=cfg_kw)
+    ((static_cfg, names), members), = \
+        engine.lane_groups(scenarios, algo="decbyzpg").items()
+    vals_flat, seeds_flat = engine.lane_operands(
+        members, jnp.asarray(grid.seeds, jnp.int32), 4)
+    engine.clear_cache()
+    _chain_windows(ENV, static_cfg, names, T, engine.window_slices(T, T),
+                   4, "decbyzpg", vals_flat, seeds_flat)
+    assert engine.compile_count() == 2      # lanes_init + one lanes_window
+
+
+def test_seed_windows_chain_matches_seed_batch_loop():
+    """The per-scenario (lanes=False) windowed pair reproduces
+    seed_batch_loop exactly, uneven window widths included (T=5, W=2
+    -> widths 3 and 2)."""
+    cfg = tiny_dec(seed=0)
+    seeds = jnp.asarray([0, 1, 2], jnp.int32)
+    ref = {k: np.asarray(v) for k, v in
+           engine.seed_batch_loop(ENV, cfg, T, 3)(seeds).items()}
+    carry = engine.seed_init_loop(ENV, cfg, 3)(seeds)
+    chunks = []
+    for start, stop in engine.window_slices(T, 2):
+        win = engine.seed_window_loop(ENV, cfg, T, stop - start, 3)
+        carry, ch = win(carry, seeds, np.arange(start, stop))
+        chunks.append(ch)
+    got = engine.assemble_hist(carry, chunks, "decbyzpg")
+    assert set(got) == set(ref)
+    for k in ref:
+        np.testing.assert_array_equal(got[k], ref[k], err_msg=k)
+
+
+def test_lane_carry_struct_matches_init_loop():
+    """The eval_shape skeleton names the same leaves/shapes/dtypes as the
+    real init program's output — the sweep-resume restore contract."""
+    cfg = tiny_dec()
+    a = engine._algo("decbyzpg")
+    static_cfg, _, _ = engine.lane_split(cfg, a.traced_fields)
+    struct = engine.lane_carry_struct(ENV, static_cfg, 4, "decbyzpg")
+    real = engine.lane_init_loop(ENV, static_cfg, 4, "decbyzpg")(
+        jnp.arange(4, dtype=jnp.int32))
+    s_flat = jax.tree_util.tree_flatten(struct)[0]
+    r_flat, r_def = jax.tree_util.tree_flatten(real)
+    assert jax.tree_util.tree_structure(struct) == r_def
+    for s, r in zip(s_flat, r_flat):
+        assert tuple(s.shape) == tuple(r.shape)
+        assert s.dtype == r.dtype
+
+
+def test_pad_rows_repeats_last_row_and_slices_clean():
+    x = jnp.arange(6, dtype=jnp.float32).reshape(3, 2)
+    padded = engine._pad_rows(x, 5)
+    assert padded.shape == (5, 2)
+    np.testing.assert_array_equal(np.asarray(padded[:3]), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(padded[3:]),
+                                  np.tile(np.asarray(x[-1]), (2, 1)))
+    assert engine._pad_rows(x, 3) is x      # no-op when already aligned

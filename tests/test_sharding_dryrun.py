@@ -120,6 +120,41 @@ print("LANE_SHARD_OK")
     assert "LANE_SHARD_OK" in _run_subprocess(code)
 
 
+def test_lane_grid_pads_uneven_rows_onto_mesh():
+    """An uneven lane×seed batch (3 lanes × 2 seeds = 6 rows on a
+    4-device mesh) pads to the device multiple, shards, and still
+    reproduces the per-scenario loop — pad rows never leak into
+    summaries."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, numpy as np
+from repro.core.engine import ScenarioGrid, run_grid
+from repro.distributed.sharding import lane_mesh, lane_sharding, padded_rows
+from repro.rl.envs import make_cartpole
+
+mesh = lane_mesh()
+assert lane_sharding(mesh, 6) is None         # uneven rows can't shard...
+assert padded_rows(mesh, 6) == 8              # ...so the grid pads to 8
+assert padded_rows(mesh, 8) == 8
+
+env = make_cartpole(horizon=10)
+grid = ScenarioGrid(seeds=(0, 1), axes={"eta": (1e-3, 5e-3, 1e-2)})
+kw = dict(algo="decbyzpg", K=3, n_byz=1, attack="sign_flip",
+          N=4, B=2, kappa=1, hidden=(4,))
+lanes = run_grid(env, grid, 3, lanes=True, **kw)
+per = run_grid(env, grid, 3, lanes=False, **kw)
+for scn in per:
+    assert lanes[scn]["returns"].shape == per[scn]["returns"].shape
+    np.testing.assert_allclose(lanes[scn]["returns"],
+                               per[scn]["returns"], atol=1e-5)
+    np.testing.assert_array_equal(lanes[scn]["samples"],
+                                  per[scn]["samples"])
+print("LANE_PAD_OK")
+"""
+    assert "LANE_PAD_OK" in _run_subprocess(code)
+
+
 def test_dryrun_results_if_present():
     """When the production sweep has run, every recorded pair must have
     lowered+compiled OK."""

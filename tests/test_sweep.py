@@ -1,0 +1,230 @@
+"""Sweep service tests (DESIGN.md §12): window slicing, windowed-vs-
+one-shot bit-identity through SweepRunner, kill-and-resume from the
+manifest, resume compile accounting, and manifest mismatch reporting."""
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.engine import ScenarioGrid, run_grid
+from repro.rl.envs import make_cartpole
+from repro.sweep import SweepError, SweepMismatch, SweepRunner
+
+ENV_SPEC = "cartpole(horizon=20)"
+ENV = make_cartpole(horizon=20)
+T = 6
+
+DEC_KW = dict(K=3, n_byz=1, N=4, B=2, kappa=2, hidden=(8,))
+DEC_AXES = {"eta": (1e-2, 5e-3),
+            "attack": ("none", "large_noise(sigma=10)")}
+
+
+def _assert_results_equal(res, ref):
+    """res: ExperimentResult from the sweep; ref: run_grid dict."""
+    assert set(map(tuple, res.keys())) == set(map(tuple, ref.keys()))
+    for scn in ref:
+        got, want = res[tuple(scn)], ref[scn]
+        assert set(got) == set(want)
+        for k in ("returns", "samples"):
+            np.testing.assert_array_equal(got[k], want[k])
+        assert got["final_return_mean"] == want["final_return_mean"]
+
+
+# ---------------------------------------------------------------------------
+# window_slices
+# ---------------------------------------------------------------------------
+
+
+def test_window_slices_cover_and_two_widths():
+    for T_, W in ((6, 1), (6, 3), (7, 3), (50, 7), (5, 5)):
+        slices = engine.window_slices(T_, W)
+        assert len(slices) == W
+        assert slices[0][0] == 0 and slices[-1][1] == T_
+        # contiguous, and at most two distinct widths (remainder leading)
+        for (_, a_stop), (b_start, _) in zip(slices, slices[1:]):
+            assert a_stop == b_start
+        widths = sorted({stop - start for start, stop in slices})
+        assert len(widths) <= 2
+        if len(widths) == 2:
+            assert widths[1] - widths[0] == 1
+
+
+def test_window_slices_rejects_bad_counts():
+    with pytest.raises(ValueError, match="windows"):
+        engine.window_slices(5, 0)
+    with pytest.raises(ValueError, match="windows"):
+        engine.window_slices(5, 6)
+
+
+# ---------------------------------------------------------------------------
+# Windowed == one-shot (in-memory sweeps)
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_windowed_matches_run_grid_decbyzpg():
+    """A 3-window sweep over honest + attacked lanes reproduces the
+    one-shot lane-batched grid bit for bit (the window programs replay
+    the identical per-seed key stream)."""
+    ref = run_grid(ENV, ScenarioGrid(seeds=(0, 1), axes=DEC_AXES), T,
+                   algo="decbyzpg", **DEC_KW)
+    res = SweepRunner(algo="decbyzpg", env=ENV_SPEC, T=T, seeds=(0, 1),
+                      axes=DEC_AXES, windows=3, **DEC_KW).run()
+    _assert_results_equal(res, ref)
+    for scn in ref:
+        np.testing.assert_array_equal(res[tuple(scn)]["theta"],
+                                      ref[scn]["theta"])
+
+
+def test_sweep_windowed_matches_run_grid_byzpg():
+    axes = {"eta": (1e-2, 2e-2)}
+    kw = dict(K=3, n_byz=1, attack="sign_flip", N=4, B=2, hidden=(8,))
+    ref = run_grid(ENV, ScenarioGrid(seeds=(0, 1), axes=axes), T,
+                   algo="byzpg", **kw)
+    res = SweepRunner(algo="byzpg", env=ENV_SPEC, T=T, seeds=(0, 1),
+                      axes=axes, windows=2, **kw).run()
+    _assert_results_equal(res, ref)
+
+
+def test_sweep_single_window_matches_run_grid():
+    """windows=1 still routes through the windowed programs and matches."""
+    ref = run_grid(ENV, ScenarioGrid(seeds=(0, 1, 2),
+                                     axes={"eta": (1e-2,)}), T,
+                   algo="decbyzpg", attack="sign_flip", **DEC_KW)
+    res = SweepRunner(algo="decbyzpg", env=ENV_SPEC, T=T, seeds=3,
+                      axes={"eta": (1e-2,)}, windows=1,
+                      attack="sign_flip", **DEC_KW).run()
+    _assert_results_equal(res, ref)
+
+
+# ---------------------------------------------------------------------------
+# Kill-and-resume through the sweep directory
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_kill_and_resume_bit_identical(tmp_path):
+    """Crash simulation: one window executes, the process 'dies', a fresh
+    runner resumes from the manifest — and the stitched result equals the
+    uninterrupted one-shot grid exactly, attacked lanes included."""
+    out = str(tmp_path / "sweep")
+    ref = run_grid(ENV, ScenarioGrid(seeds=(0, 1), axes=DEC_AXES), T,
+                   algo="decbyzpg", **DEC_KW)
+    first = SweepRunner(algo="decbyzpg", env=ENV_SPEC, T=T, seeds=(0, 1),
+                        axes=DEC_AXES, windows=3, out_dir=out, **DEC_KW)
+    assert first.run(max_windows=1) is None      # preempted mid-sweep
+    # a fresh runner reconstructed purely from the manifest
+    res = SweepRunner.resume(out).run()
+    _assert_results_equal(res, ref)
+    assert (tmp_path / "sweep" / "summary.json").exists()
+
+
+def test_sweep_kill_and_resume_byzpg(tmp_path):
+    out = str(tmp_path / "sweep")
+    axes = {"eta": (1e-2, 2e-2)}
+    kw = dict(K=3, n_byz=1, attack="large_noise(sigma=10)", N=4, B=2,
+              hidden=(8,))
+    ref = run_grid(ENV, ScenarioGrid(seeds=(0, 1), axes=axes), T,
+                   algo="byzpg", **kw)
+    first = SweepRunner(algo="byzpg", env=ENV_SPEC, T=T, seeds=(0, 1),
+                        axes=axes, windows=3, out_dir=out, **kw)
+    assert first.run(max_windows=2) is None
+    _assert_results_equal(SweepRunner.resume(out).run(), ref)
+
+
+def test_sweep_resume_skips_completed_groups(tmp_path):
+    """Resuming runs only the missing lane groups: a fully committed
+    group reloads its artifacts with zero new compiles and zero
+    dispatches; only the never-started group builds programs."""
+    out = str(tmp_path / "sweep")
+    # two lane groups: the attack *name* differs, so the static
+    # signatures split (unlike a traced sigma sweep)
+    axes = {"attack": ("none", "sign_flip")}
+    W = 2
+    runner = SweepRunner(algo="decbyzpg", env=ENV_SPEC, T=T,
+                         seeds=(0, 1), axes=axes, windows=W,
+                         out_dir=out, **DEC_KW)
+    assert runner.run(max_windows=W) is None    # group 0 done, group 1 not
+    engine.clear_cache()
+    res = SweepRunner.resume(out).run()
+    # group 1 compiled its init + its (single-width) window program;
+    # group 0 was reloaded from disk without touching the engine
+    assert engine.compile_count() == 2
+    ref = run_grid(ENV, ScenarioGrid(seeds=(0, 1), axes=axes), T,
+                   algo="decbyzpg", **DEC_KW)
+    _assert_results_equal(res, ref)
+
+
+def test_sweep_completed_resume_compiles_nothing(tmp_path):
+    """Re-running a finished sweep is a pure reload: the engine cache
+    gains no entries and the result still matches."""
+    out = str(tmp_path / "sweep")
+    runner = SweepRunner(algo="decbyzpg", env=ENV_SPEC, T=T,
+                         seeds=(0, 1), axes=DEC_AXES, windows=2,
+                         out_dir=out, **DEC_KW)
+    first = runner.run()
+    assert first is not None
+    engine.clear_cache()
+    res = SweepRunner.resume(out).run()
+    assert engine.compile_count() == 0
+    _assert_results_equal(res, {scn: first[tuple(scn)]
+                                for scn in first.keys()})
+
+
+# ---------------------------------------------------------------------------
+# Manifest validation + runner argument errors
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_manifest_mismatch_names_fields(tmp_path):
+    out = str(tmp_path / "sweep")
+    SweepRunner(algo="decbyzpg", env=ENV_SPEC, T=T, seeds=(0, 1),
+                axes={"eta": (1e-2,)}, windows=2, out_dir=out,
+                **DEC_KW).run(max_windows=1)
+    clash = SweepRunner(algo="decbyzpg", env=ENV_SPEC, T=T + 2,
+                        seeds=(0, 1, 2), axes={"eta": (1e-2,)},
+                        windows=2, out_dir=out, **DEC_KW)
+    with pytest.raises(SweepMismatch) as ei:
+        clash.run()
+    msg = str(ei.value)
+    assert "meta.T" in msg and "meta.seeds" in msg
+    assert "window_slices" in msg
+
+
+def test_sweep_resume_recorded_override_requires_hook(tmp_path):
+    out = str(tmp_path / "sweep")
+    hook = lambda cfg: cfg                                  # noqa: E731
+    SweepRunner(algo="decbyzpg", env=ENV_SPEC, T=T, seeds=(0,),
+                axes={"eta": (1e-2,)}, windows=2, out_dir=out,
+                override=hook, **DEC_KW).run(max_windows=1)
+    with pytest.raises(SweepError, match="override"):
+        SweepRunner.resume(out)
+    res = SweepRunner.resume(out, override=hook).run()
+    assert res is not None
+
+
+def test_sweep_rejects_unknown_mode_and_non_persistable_axis():
+    with pytest.raises(SweepError, match="mode"):
+        SweepRunner(mode="galaxy")
+    bad = SweepRunner(algo="decbyzpg", env=ENV_SPEC, T=T, seeds=(0,),
+                      axes={"eta": (1e-2,)}, windows=1,
+                      hidden=(8,), K=3, N=4, B=2,
+                      probe=object())
+    with pytest.raises(SweepError, match="persist"):
+        bad._meta()
+
+
+# ---------------------------------------------------------------------------
+# Telemetry plane: sweep.window / sweep.partial stream through repro.obs
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_streams_window_and_partial_records(tmp_path):
+    from repro import obs
+    with obs.capture() as sink:
+        SweepRunner(algo="decbyzpg", env=ENV_SPEC, T=T, seeds=(0, 1),
+                    axes={"eta": (1e-2, 5e-3)}, windows=3,
+                    out_dir=str(tmp_path / "s"), **DEC_KW).run()
+    windows = [r for r in sink.records if r["stream"] == "sweep.window"]
+    partials = [r for r in sink.records if r["stream"] == "sweep.partial"]
+    assert [w["window"] for w in windows] == [0, 1, 2]
+    assert windows[-1]["t_done"] == T
+    assert len(partials) == 2               # one per scenario in the group
+    assert all(np.isfinite(p["final_return_mean"]) for p in partials)

@@ -1,0 +1,62 @@
+"""Multi-process sweep smoke (DESIGN.md §12): two cooperating CPU
+processes span one lane mesh via ``jax.distributed`` (gloo transport)
+and must print summaries identical to each other and to a single-process
+run of the same grid.  Runs out-of-process because ``jax.distributed``
+must initialize before jax does anything else."""
+import os
+import socket
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+GRID_ARGS = ["--algo", "decbyzpg", "--env", "cartpole(horizon=10)",
+             "--T", "4", "--seeds", "2", "--windows", "2",
+             "--axis", "eta=5e-3,1e-2",
+             "--set", "K=3", "--set", "n_byz=1",
+             "--set", "attack=large_noise(sigma=10)",
+             "--set", "N=4", "--set", "B=2", "--set", "kappa=1",
+             "--set", "hidden=(4,)"]
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+def _launch(extra, wait=True):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.sweep"] + GRID_ARGS + extra,
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        text=True)
+    if not wait:
+        return proc
+    out, err = proc.communicate(timeout=600)
+    assert proc.returncode == 0, err[-3000:]
+    return out
+
+
+def _summary_lines(out: str) -> list:
+    return sorted(ln for ln in out.splitlines() if "final_return" in ln)
+
+
+def test_two_process_span_matches_single_process():
+    ref = _summary_lines(_launch([]))
+    assert len(ref) == 2
+
+    port = _free_port()
+    flags = ["--mode", "span", "--processes", "2",
+             "--coordinator", f"localhost:{port}"]
+    p0 = _launch(flags + ["--process-id", "0"], wait=False)
+    p1 = _launch(flags + ["--process-id", "1"], wait=False)
+    out0, err0 = p0.communicate(timeout=600)
+    out1, err1 = p1.communicate(timeout=600)
+    assert p0.returncode == 0, err0[-3000:]
+    assert p1.returncode == 0, err1[-3000:]
+    # every process computes (and can report) the full merged result, and
+    # the spanning-mesh run reproduces the single-process numbers
+    assert _summary_lines(out0) == _summary_lines(out1) == ref
